@@ -1,0 +1,120 @@
+"""Paper fig. 4: RMSPE and boundary RMSD as a function of delta, for
+m in {5, 10, 20} inducing points.
+
+Default is a REDUCED setting sized for this CPU container (10x10 grid,
+12k obs, 2 replications); ``--paper-scale`` runs the full 20x20/48.6k/10-rep
+configuration (hours on one CPU, the real target is a pod).
+
+Validation targets from the paper (§5):
+  * RMSPE increases monotonically (small at low delta) with delta;
+  * boundary RMSD DECREASES for delta > 0 (around -3..-5% at delta~0.125);
+  * effects are largest for m = 20.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.psvgp_e3sm import FULL as E3SM
+from repro.core import psvgp, svgp
+from repro.core.metrics import boundary_rmsd, rmspe
+from repro.core.neighbors import boundary_probes
+from repro.core.partition import make_grid, partition_data
+from repro.data.spatial import e3sm_like_field
+
+DELTAS = (0.0, 0.05, 0.125, 0.25, 0.5, 1.0)
+
+
+def run(paper_scale: bool = False, comm: str = "gather", use_pallas: bool = False,
+        out_dir: str = "benchmarks/results") -> dict:
+    if paper_scale:
+        n, grid_shape, ms, iters, reps, ppe = (
+            E3SM.n_obs, E3SM.grid, (5, 10, 20), E3SM.iters, 10, E3SM.probes_per_edge
+        )
+    else:
+        n, grid_shape, ms, iters, reps, ppe = 12_000, (10, 10), (5, 10), 2500, 2, 8
+
+    # Regime note (EXPERIMENTS.md §Repro): the paper's boundary-smoothness
+    # effect requires observation noise / sub-partition structure to be
+    # non-negligible — with dense low-noise data the independent models
+    # already agree at boundaries and neighbor sampling only dilutes the
+    # m inducing points. noise_sd=2.5 gives the trade-off profile closest
+    # to the paper's fig. 4 (~ -12% bRMSD for ~ +5% RMSPE at delta=0.125).
+    ds = e3sm_like_field(n=n, seed=0, noise_sd=2.5)
+    grid = make_grid(ds.x, *grid_shape)
+    data = partition_data(ds.x, ds.y, grid)
+    probes = boundary_probes(grid, probes_per_edge=ppe)
+    results = []
+    for m in ms:
+        for delta in DELTAS:
+            r_list, b_list, t_list = [], [], []
+            for rep in range(reps):
+                cfg = psvgp.PSVGPConfig(
+                    svgp=svgp.SVGPConfig(num_inducing=m, input_dim=2, use_pallas=use_pallas),
+                    delta=delta, batch_size=E3SM.batch_size,
+                    learning_rate=0.05, comm=comm, seed=rep,
+                )
+                static = psvgp.build(cfg, data)
+                state = psvgp.init(jax.random.PRNGKey(rep), cfg, data)
+                t0 = time.time()
+                state = psvgp.fit(static, state, data, iters)
+                jax.block_until_ready(state.params.m_star)
+                t_list.append(time.time() - t0)
+                r_list.append(float(rmspe(static, state, data)))
+                b_list.append(float(boundary_rmsd(static, state, probes)))
+            rec = {
+                "m": m, "delta": delta, "comm": comm,
+                "rmspe": float(np.mean(r_list)), "rmspe_sd": float(np.std(r_list)),
+                "boundary_rmsd": float(np.mean(b_list)), "boundary_rmsd_sd": float(np.std(b_list)),
+                "fit_seconds": float(np.mean(t_list)), "iters": iters, "reps": reps,
+            }
+            results.append(rec)
+            us = 1e6 * np.mean(t_list) / iters
+            print(f"bench_delta[m={m},delta={delta}],{us:.1f},"
+                  f"rmspe={rec['rmspe']:.4f};brmsd={rec['boundary_rmsd']:.4f}")
+    summary = _validate(results)
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"delta_sweep_{comm}.json"), "w") as f:
+        json.dump({"results": results, "validation": summary}, f, indent=2)
+    return {"results": results, "validation": summary}
+
+
+def _validate(results) -> dict:
+    """Check the paper's qualitative claims on this run."""
+    out = {}
+    for m in sorted({r["m"] for r in results}):
+        rows = sorted([r for r in results if r["m"] == m], key=lambda r: r["delta"])
+        r0 = rows[0]  # delta = 0 == ISVGP
+        best_b = min(rows, key=lambda r: r["boundary_rmsd"])
+        out[f"m{m}"] = {
+            "rmspe_at_0": r0["rmspe"],
+            "rmspe_monotone_increasing": all(
+                rows[i + 1]["rmspe"] >= rows[i]["rmspe"] - 0.01 for i in range(len(rows) - 1)
+            ),
+            "boundary_rmsd_at_0": r0["boundary_rmsd"],
+            "best_boundary_delta": best_b["delta"],
+            "boundary_improvement_pct": 100.0
+            * (r0["boundary_rmsd"] - best_b["boundary_rmsd"])
+            / max(r0["boundary_rmsd"], 1e-9),
+            "delta_positive_improves_boundary": best_b["delta"] > 0.0,
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--comm", default="gather", choices=["gather", "ppermute"])
+    ap.add_argument("--pallas", action="store_true")
+    args = ap.parse_args()
+    out = run(paper_scale=args.paper_scale, comm=args.comm, use_pallas=args.pallas)
+    print(json.dumps(out["validation"], indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Paper fig. 3: runtime/scaling of PSVGP.
+
+On this single-CPU container the paper's N_proc axis is emulated by the
+vmapped partition axis: one XLA program trains all partitions, so
+"partitions per processor" = P here. We report:
+
+  (a) per-iteration wall time vs delta (paper: nearly flat — the
+      decentralized scheme adds almost no cost as delta grows);
+  (b) weak scaling: per-iteration time as P grows at fixed per-partition
+      load (paper: flat = perfect weak scaling; here the vmap width grows,
+      so flat-per-partition time is the analogue);
+  (c) iterations that fit the paper's in-situ budget (1 E3SM step ~ 1 s).
+
+Distributed scaling on real hardware is proven separately by the dry-run
+(collective bytes independent of P per device; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.psvgp_e3sm import FULL as E3SM
+from repro.core import psvgp, svgp
+from repro.core.partition import make_grid, partition_data
+from repro.data.spatial import e3sm_like_field
+
+
+def _time_iters(static, state, data, iters=60, warmup=10):
+    for _ in range(warmup):
+        state, _ = psvgp.train_step(static, state, jax.random.PRNGKey(0), data)
+    jax.block_until_ready(state.params.m_star)
+    t0 = time.time()
+    for _ in range(iters):
+        state, _ = psvgp.train_step(static, state, jax.random.PRNGKey(0), data)
+    jax.block_until_ready(state.params.m_star)
+    return (time.time() - t0) / iters
+
+
+def run(out_dir: str = "benchmarks/results") -> dict:
+    results = {"delta_sweep": [], "weak_scaling": []}
+
+    # (a) per-iteration time vs delta at the paper's grid
+    ds = e3sm_like_field(n=12_000, seed=0)
+    grid = make_grid(ds.x, 10, 10)
+    data = partition_data(ds.x, ds.y, grid)
+    for comm in ("gather", "ppermute"):
+        for delta in (0.0, 0.125, 0.25, 0.5, 1.0):
+            cfg = psvgp.PSVGPConfig(
+                svgp=svgp.SVGPConfig(num_inducing=5, input_dim=2),
+                delta=delta, batch_size=E3SM.batch_size,
+                learning_rate=E3SM.learning_rate, comm=comm,
+            )
+            static = psvgp.build(cfg, data)
+            state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+            dt = _time_iters(static, state, data)
+            rec = {"comm": comm, "delta": delta, "s_per_iter": dt,
+                   "iters_per_e3sm_step": int(1.0 / dt)}
+            results["delta_sweep"].append(rec)
+            print(f"bench_scaling[delta,{comm},{delta}],{dt*1e6:.0f},"
+                  f"iters_per_budget={rec['iters_per_e3sm_step']}")
+
+    # (b) weak scaling in P (fixed per-partition density)
+    for gx in (5, 10, 20):
+        P = gx * gx
+        n = 120 * P  # ~paper's median 150/partition territory
+        ds = e3sm_like_field(n=n, seed=1)
+        grid = make_grid(ds.x, gx, gx)
+        data = partition_data(ds.x, ds.y, grid)
+        cfg = psvgp.PSVGPConfig(
+            svgp=svgp.SVGPConfig(num_inducing=5, input_dim=2),
+            delta=0.125, batch_size=E3SM.batch_size,
+            learning_rate=E3SM.learning_rate, comm="gather",
+        )
+        static = psvgp.build(cfg, data)
+        state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+        dt = _time_iters(static, state, data, iters=30)
+        rec = {"P": P, "n": n, "s_per_iter": dt, "s_per_iter_per_partition": dt / P}
+        results["weak_scaling"].append(rec)
+        print(f"bench_scaling[weak,P={P}],{dt*1e6:.0f},per_partition_us={dt/P*1e6:.2f}")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "scaling.json"), "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main() -> None:
+    argparse.ArgumentParser().parse_args()
+    run()
+
+
+if __name__ == "__main__":
+    main()

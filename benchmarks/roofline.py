@@ -1,0 +1,83 @@
+"""Roofline table (deliverable g): formats the dry-run JSONL records into
+the EXPERIMENTS.md table — three terms, dominant bottleneck, MODEL_FLOPS
+ratio, and a rule-based 'what would move the dominant term' note.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--jsonl dryrun_single_pod.jsonl]
+
+If the JSONL is missing, run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_single_pod.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def advice(rec: dict) -> str:
+    dom = rec["dominant"]
+    bd = rec.get("collective_breakdown", {})
+    top_coll = max(bd, key=bd.get) if bd else "none"
+    if dom == "collective":
+        if top_coll == "all-reduce":
+            return "all-reduce dominates: overlap grad reduce with bwd / reduce-scatter + fp reduced precision"
+        if top_coll == "all-gather":
+            return "all-gather dominates: reshard to keep the gathered operand local (check head-reshape resharding)"
+        if top_coll == "all-to-all":
+            return "expert all-to-all dominates: fewer expert hops (hierarchical a2a) or larger capacity batching"
+        return "collective-permute bound: overlap with compute (async permute)"
+    if dom == "memory":
+        if rec["kind"] == "decode":
+            return "KV/state streaming bound (expected at decode): quantize cache to int8 or shard seq further"
+        return "HBM streaming bound: increase arithmetic intensity (fuse elementwise, larger tiles, bf16 activations)"
+    return "MXU-bound: good; next lever is reducing remat recompute or attention flops (windowing)"
+
+
+def load(jsonl: str) -> list:
+    recs = []
+    with open(jsonl) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt_table(recs: list) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant "
+        "| peak GiB/dev | MODEL/HLO | note |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in recs:
+        t = r["roofline_s"]
+        peak = r["bytes_per_device"]["peak_est"] / 2**30
+        ratio = r.get("useful_compute_ratio", 0.0)
+        rows.append(
+            f"| {r['config_name']} | {r['shape']} | {r['mesh']} "
+            f"| {t['compute']:.3e} | {t['memory']:.3e} | {t['collective']:.3e} "
+            f"| **{r['dominant']}** | {peak:.2f} | {ratio:.2f} | {advice(r)} |"
+        )
+    return hdr + "\n".join(rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="dryrun_single_pod.jsonl")
+    args = ap.parse_args()
+    if not os.path.exists(args.jsonl):
+        print(f"{args.jsonl} not found — run the dry-run first:", file=sys.stderr)
+        print("  PYTHONPATH=src python -m repro.launch.dryrun --all --out "
+              + args.jsonl, file=sys.stderr)
+        sys.exit(1)
+    recs = load(args.jsonl)
+    print(fmt_table(recs))
+    for r in recs:
+        t = r["roofline_s"]
+        dom_val = max(t.values())
+        print(f"roofline[{r['config_name']},{r['shape']}],{dom_val*1e6:.0f},"
+              f"dominant={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark (plus JSON
+artifacts under benchmarks/results/).
+
+  PYTHONPATH=src python -m benchmarks.run            # default (CPU-sized)
+  PYTHONPATH=src python -m benchmarks.run --section delta
+  PYTHONPATH=src python -m benchmarks.run --paper-scale   # full fig. 3/4
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "delta", "scaling", "kernels", "roofline"])
+    ap.add_argument("--paper-scale", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("# name,us_per_call,derived")
+
+    if args.section in ("all", "kernels"):
+        print("## bench_kernels — Pallas SVGP kernels vs oracle (DESIGN.md §6)")
+        from benchmarks import bench_kernels
+
+        bench_kernels.run()
+
+    if args.section in ("all", "scaling"):
+        print("## bench_scaling — paper fig. 3 (runtime / weak scaling)")
+        from benchmarks import bench_scaling
+
+        bench_scaling.run()
+
+    if args.section in ("all", "delta"):
+        print("## bench_delta — paper fig. 4 (RMSPE & boundary RMSD vs delta)")
+        from benchmarks import bench_delta
+
+        out = bench_delta.run(paper_scale=args.paper_scale)
+        print(json.dumps(out["validation"], indent=2))
+
+    if args.section in ("all", "roofline"):
+        print("## roofline — dry-run derived terms (EXPERIMENTS.md §Roofline)")
+        jsonl = "dryrun_single_pod.jsonl"
+        if os.path.exists(jsonl):
+            from benchmarks import roofline
+
+            recs = roofline.load(jsonl)
+            for r in recs:
+                t = r["roofline_s"]
+                print(f"roofline[{r['config_name']},{r['shape']}],"
+                      f"{max(t.values())*1e6:.0f},dominant={r['dominant']}")
+        else:
+            print(f"(skipped: {jsonl} not present — run repro.launch.dryrun --all)")
+
+    print(f"# total bench time: {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Train an LM-substrate architecture end-to-end (~100M-class when run with
+--full on real hardware; smoke-sized by default for CPU).
+
+  PYTHONPATH=src python examples/lm_train.py --arch qwen3-0.6b --steps 200
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true", help="full config (needs a pod)")
+    args = ap.parse_args()
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", args.arch,
+        "--steps", str(args.steps), "--batch", str(args.batch),
+        "--seq", str(args.seq), "--lr", "1e-3", "--log-every", "20",
+    ]
+    if not args.full:
+        cmd.append("--smoke")
+    sys.exit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+  PYTHONPATH=src python examples/serve_demo.py --arch recurrentgemma-2b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    sys.exit(subprocess.call([
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len),
+        "--gen", str(args.gen),
+    ]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import load_pytree, save_pytree, latest_step, save_train_state, load_train_state
+
+__all__ = ["save_pytree", "load_pytree", "latest_step", "save_train_state", "load_train_state"]

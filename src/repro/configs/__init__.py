@@ -1,0 +1,4 @@
+from repro.configs.registry import ARCH_IDS, get, get_smoke, swa_variant
+from repro.configs.shapes import INPUT_SHAPES, input_specs
+
+__all__ = ["ARCH_IDS", "get", "get_smoke", "swa_variant", "INPUT_SHAPES", "input_specs"]

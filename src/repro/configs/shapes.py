@@ -1,0 +1,61 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+The four assigned (seq_len, global_batch) shapes. ``train_*`` lowers
+train_step, ``prefill_*`` lowers prefill_step, ``decode_*``/``long_*``
+lower decode_step (ONE new token against a seq_len cache).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+class InputShape(NamedTuple):
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape(4_096, 256, "train"),
+    "prefill_32k": InputShape(32_768, 32, "prefill"),
+    "decode_32k": InputShape(32_768, 128, "decode"),
+    "long_500k": InputShape(524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Data-side inputs as ShapeDtypeStructs (no allocation).
+
+    For decode kinds this is the single-token input; the cache structs are
+    built separately (jax.eval_shape over init_cache) by the dry-run.
+    """
+    sh = INPUT_SHAPES[shape_name]
+    B = sh.global_batch
+    i32 = jnp.int32
+    f32 = jnp.float32
+
+    if sh.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+        return specs
+
+    S = sh.seq_len
+    specs = {}
+    if cfg.vision is not None:
+        P = cfg.vision.num_patches
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+        specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.vision.vit_dim), f32)
+        tgt = S - P
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        tgt = S
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        specs["frames"] = jax.ShapeDtypeStruct((B, e.num_frames, e.frontend_dim), f32)
+    if sh.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((B, tgt), i32)
+    return specs

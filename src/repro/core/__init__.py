@@ -1,0 +1,4 @@
+"""Core of the reproduction: SVGP + the paper's PSVGP distribution scheme."""
+from repro.core.svgp import SVGPConfig, SVGPParams, init_svgp_params, elbo, predict, q_f
+
+__all__ = ["SVGPConfig", "SVGPParams", "init_svgp_params", "elbo", "predict", "q_f"]

@@ -1,0 +1,60 @@
+"""Evaluation metrics from the paper's §5.
+
+* RMSPE over all observations — each partition's model predicts its own
+  data (in-sample, as the paper reports).
+* Boundary RMSD — root mean square difference between the predictions of
+  neighboring local models at probe locations equally spaced along shared
+  boundaries (the paper uses 17,556 such locations for the 20x20 grid).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.neighbors import BoundaryProbes
+from repro.core.partition import PartitionedData
+from repro.core.psvgp import PSVGPState, PSVGPStatic, predict_at_partitions, predict_local
+
+
+def rmspe(static: PSVGPStatic, state: PSVGPState, data: PartitionedData) -> jnp.ndarray:
+    """Global in-sample root-mean-square prediction error."""
+    mean, _ = predict_local(static, state, data.x)  # (P, n_max)
+    se = (mean - data.y) ** 2 * data.mask
+    return jnp.sqrt(jnp.sum(se) / jnp.maximum(jnp.sum(data.mask), 1.0))
+
+
+def boundary_rmsd(
+    static: PSVGPStatic, state: PSVGPState, probes: BoundaryProbes
+) -> jnp.ndarray:
+    """RMS disagreement between the two models sharing each boundary."""
+    mean_l, _ = predict_at_partitions(static, state, probes.left, probes.points)
+    mean_r, _ = predict_at_partitions(static, state, probes.right, probes.points)
+    return jnp.sqrt(jnp.mean((mean_l - mean_r) ** 2))
+
+
+def per_partition_rmspe(
+    static: PSVGPStatic, state: PSVGPState, data: PartitionedData
+) -> jnp.ndarray:
+    """(P,) in-sample RMSPE per partition (diagnostic; pole partitions in the
+    paper are the hard ones)."""
+    mean, _ = predict_local(static, state, data.x)
+    se = (mean - data.y) ** 2 * data.mask
+    cnt = jnp.maximum(jnp.sum(data.mask, axis=1), 1.0)
+    return jnp.sqrt(jnp.sum(se, axis=1) / cnt)
+
+
+def holdout_rmspe(
+    static: PSVGPStatic,
+    state: PSVGPState,
+    x_hold: jnp.ndarray,
+    y_hold: jnp.ndarray,
+    mask_hold: jnp.ndarray,
+) -> jnp.ndarray:
+    """Out-of-sample RMSPE on held-out points already routed to partitions
+    (x_hold: (P, Q, d)) — beyond-paper diagnostic (the paper reports
+    in-sample only)."""
+    mean, _ = predict_local(static, state, x_hold)
+    se = (mean - y_hold) ** 2 * mask_hold
+    return jnp.sqrt(jnp.sum(se) / jnp.maximum(jnp.sum(mask_hold), 1.0))

@@ -1,0 +1,305 @@
+"""PSVGP — the paper's contribution (§4): N_part local SVGPs trained with
+delta-weighted neighbor sampling and decentralized communication.
+
+Two communication modes (DESIGN.md §2):
+
+* ``comm="gather"``  — paper-faithful: every partition independently samples
+  its own source partition k' ~ eq. (9) and the mini-batch is materialized
+  by a cross-partition gather. On one host this is exactly the paper's
+  algorithm; under SPMD it lowers to a small all-gather.
+
+* ``comm="ppermute"`` — TPU-native: one globally shared direction per step,
+  mini-batches exchanged with a single ``lax.ppermute`` (ICI collective-
+  permute = decentralized point-to-point), unbiasedness restored via
+  importance weights pi_j(d)/p(d). Available both as a single-host
+  simulation (bit-identical math) and as a true shard_map program
+  (``repro.launch.dryrun`` lowers it on the production mesh).
+
+The per-partition models are the ``repro.core.svgp`` SVGP; everything is
+stacked on a leading partition axis and vmapped, so one XLA program trains
+all 400 partitions at once — the SPMD analogue of the paper's MPI ranks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import svgp
+from repro.core.neighbors import NUM_SLOTS, direction_permutations, neighbor_table
+from repro.core.partition import PartitionedData
+from repro.core.sampler import (
+    SlotDistribution,
+    gather_minibatch,
+    sample_minibatch_indices,
+    sample_slots,
+    slot_distribution,
+)
+from repro.gp.covariances import make_covariance
+from repro.optim import AdamState, adam_init, adam_update
+
+
+class PSVGPConfig(NamedTuple):
+    svgp: svgp.SVGPConfig
+    delta: float = 0.0  # eq. (9): 0 = ISVGP, 1 = full PSVGP
+    batch_size: int = 32
+    learning_rate: float = 0.02
+    comm: str = "gather"  # "gather" | "ppermute"
+    seed: int = 0
+
+
+class PSVGPState(NamedTuple):
+    params: svgp.SVGPParams  # every leaf has leading (P, ...) axis
+    opt: AdamState
+    step: jnp.ndarray  # () int32
+
+
+class PSVGPStatic(NamedTuple):
+    """Static (host-side) companions to the jitted step functions."""
+
+    cfg: PSVGPConfig
+    cov_fn: Callable
+    dist: SlotDistribution
+    perms: jnp.ndarray  # (5, P) direction permutations (ppermute mode)
+    p_dir: jnp.ndarray  # (5,) global direction probabilities (ppermute mode)
+
+
+def build(cfg: PSVGPConfig, data: PartitionedData) -> PSVGPStatic:
+    """Precompute topology-dependent tables from the partition grid."""
+    tbl = jnp.asarray(neighbor_table(data.grid))
+    dist = slot_distribution(data.counts, tbl, cfg.delta)
+    perms = jnp.asarray(direction_permutations(data.grid))
+    # Global direction distribution for the ppermute mode: the average of the
+    # per-partition slot distributions (minimizes the spread of the
+    # importance weights pi_j(d)/p(d) around 1).
+    p_dir = jnp.mean(dist.probs, axis=0)
+    p_dir = p_dir / jnp.sum(p_dir)
+    return PSVGPStatic(cfg=cfg, cov_fn=make_covariance(cfg.svgp.covariance), dist=dist, perms=perms, p_dir=p_dir)
+
+
+def init(key: jax.Array, cfg: PSVGPConfig, data: PartitionedData) -> PSVGPState:
+    P = data.num_partitions
+    keys = jax.random.split(key, P)
+    init_one = functools.partial(svgp.init_svgp_params, cfg=cfg.svgp)
+    params = jax.vmap(lambda k, x: init_one(k, x_init=x))(keys, data.x)
+    return PSVGPState(params=params, opt=adam_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def _loss_one(params, cov_fn, bx, by, bm, n_eff, scfg: svgp.SVGPConfig, ll_weight=1.0):
+    return -svgp.elbo(
+        params,
+        cov_fn,
+        bx,
+        by,
+        mask=bm,
+        n_total=n_eff,
+        jitter=scfg.jitter,
+        whitened=scfg.whitened,
+        use_pallas=scfg.use_pallas,
+        ll_weight=ll_weight,
+        likelihood=scfg.likelihood,
+    )
+
+
+# --------------------------------------------------------------------------
+# Paper-faithful mode: independent neighbor choice per partition (eq. 8/9).
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cov_fn"))
+def train_step_gather(
+    state: PSVGPState,
+    key: jax.Array,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    mask: jnp.ndarray,
+    dist: SlotDistribution,
+    cfg: PSVGPConfig,
+    cov_fn: Callable,
+) -> Tuple[PSVGPState, jnp.ndarray]:
+    """One SGD iteration of the paper's algorithm for all partitions at once.
+
+    Communication pattern: partition j pulls a B-point mini-batch from its
+    sampled source k'_j — at most ONE neighbor per iteration (the paper's
+    key communication bound).
+    """
+    k_slot, k_batch = jax.random.split(jax.random.fold_in(key, state.step))
+    kprime, _slot = sample_slots(k_slot, dist)  # (P,)
+    src_mask = jnp.take(mask, kprime, axis=0)  # (P, n_max)
+    idx, _ = sample_minibatch_indices(k_batch, src_mask, cfg.batch_size)
+    bx, by, bm = gather_minibatch(x, y, mask, kprime, idx)
+
+    loss_fn = functools.partial(_loss_one, cov_fn=cov_fn, scfg=cfg.svgp)
+    losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(
+        state.params, bx=bx, by=by, bm=bm, n_eff=dist.n_eff
+    )
+    new_params, new_opt = adam_update(state.params, grads, state.opt, lr=cfg.learning_rate)
+    return PSVGPState(new_params, new_opt, state.step + 1), jnp.mean(losses)
+
+
+# --------------------------------------------------------------------------
+# TPU-native mode: synchronized direction + permute, importance-weighted.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "cov_fn"))
+def train_step_ppermute(
+    state: PSVGPState,
+    key: jax.Array,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    mask: jnp.ndarray,
+    dist: SlotDistribution,
+    perms: jnp.ndarray,
+    p_dir: jnp.ndarray,
+    cfg: PSVGPConfig,
+    cov_fn: Callable,
+) -> Tuple[PSVGPState, jnp.ndarray]:
+    """Single-host simulation of the TPU-native step (identical math).
+
+    One global direction d ~ p_dir; every partition ships its OWN mini-batch
+    to the neighbor opposite d (a permutation = collective-permute on a real
+    mesh); gradients are importance-weighted by pi_j(d)/p(d) so that
+    E[update] matches eq. (8) exactly. See ``shard_map_step`` for the
+    device-sharded version of the same program.
+    """
+    kd, kb = jax.random.split(jax.random.fold_in(key, state.step))
+    d = jax.random.categorical(kd, jnp.log(jnp.maximum(p_dir, 1e-30)))  # ()
+    # Every partition samples from its own data (no communication yet).
+    idx, _ = sample_minibatch_indices(kb, mask, cfg.batch_size)
+    bx = jnp.take_along_axis(x, idx[:, :, None], axis=1)  # (P, B, dim)
+    by = jnp.take_along_axis(y, idx, axis=1)  # (P, B)
+    bm = jnp.take_along_axis(mask, idx, axis=1)
+    # Route mini-batches: receiver j gets the batch of perms[d][j].
+    perm_row = jnp.take(perms, d, axis=0)  # (P,)
+    bx = jnp.take(bx, perm_row, axis=0)
+    by = jnp.take(by, perm_row, axis=0)
+    bm = jnp.take(bm, perm_row, axis=0)
+    # Importance weight: pi_j(d)/p(d); partitions with no neighbor in this
+    # direction have pi_j(d)=0 -> weight 0 (their likelihood term is a
+    # no-op this step). Applied to the likelihood term ONLY — the KL is
+    # deterministic and keeps weight 1 (pure variance reduction; E[w]=1
+    # makes both versions unbiased, see DESIGN.md §2).
+    pi_jd = jnp.take_along_axis(dist.probs, jnp.full((dist.probs.shape[0], 1), d), axis=1)[:, 0]
+    w = pi_jd / jnp.maximum(p_dir[d], 1e-30)  # (P,)
+
+    loss_fn = functools.partial(_loss_one, cov_fn=cov_fn, scfg=cfg.svgp)
+    losses, grads = jax.vmap(jax.value_and_grad(loss_fn))(
+        state.params, bx=bx, by=by, bm=bm, n_eff=dist.n_eff, ll_weight=w
+    )
+    new_params, new_opt = adam_update(state.params, grads, state.opt, lr=cfg.learning_rate)
+    return PSVGPState(new_params, new_opt, state.step + 1), jnp.mean(losses)
+
+
+def train_step(static: PSVGPStatic, state: PSVGPState, key: jax.Array, data: PartitionedData):
+    """Dispatch on the configured communication mode."""
+    if static.cfg.comm == "gather":
+        return train_step_gather(
+            state, key, data.x, data.y, data.mask, static.dist, static.cfg, static.cov_fn
+        )
+    elif static.cfg.comm == "ppermute":
+        return train_step_ppermute(
+            state,
+            key,
+            data.x,
+            data.y,
+            data.mask,
+            static.dist,
+            static.perms,
+            static.p_dir,
+            static.cfg,
+            static.cov_fn,
+        )
+    raise ValueError(f"unknown comm mode {static.cfg.comm!r}")
+
+
+def fit(
+    static: PSVGPStatic,
+    state: PSVGPState,
+    data: PartitionedData,
+    num_iters: int,
+    key: jax.Array | None = None,
+    log_every: int = 0,
+    use_scan: bool = False,
+) -> PSVGPState:
+    """Run ``num_iters`` SGD iterations (the paper runs 100-150 per E3SM
+    time step budget; convergence experiments run a few thousand).
+
+    use_scan batches iterations inside one XLA program via lax.scan.
+    §Perf-3 log: HYPOTHESIS REFUTED on CPU — the scan carry double-buffers
+    the whole (params, opt) state per iteration and measured 2.5x SLOWER
+    than the python loop (7.4 -> 18.5 ms/iter at P=100, m=5), so the
+    default stays False; kept as an option since on TPU with donated
+    buffers the trade-off may invert. Identical math either way (keys are
+    fold_in(key, step)).
+    """
+    key = jax.random.PRNGKey(static.cfg.seed) if key is None else key
+    if use_scan and not log_every:
+        chunk = min(num_iters, 200)  # bound one program's trace length
+
+        if static.cfg.comm == "gather":
+            args = (data.x, data.y, data.mask, static.dist, static.cfg, static.cov_fn)
+            step_fn = train_step_gather
+        else:
+            args = (data.x, data.y, data.mask, static.dist, static.perms,
+                    static.p_dir, static.cfg, static.cov_fn)
+            step_fn = train_step_ppermute
+
+        import functools as _ft
+
+        @_ft.partial(jax.jit, static_argnames=())
+        def run_chunk(st):
+            def body(s, _):
+                s2, loss = step_fn(s, key, *args)
+                return s2, loss
+
+            return jax.lax.scan(body, st, None, length=chunk)
+
+        done = 0
+        while done < num_iters:
+            n = min(chunk, num_iters - done)
+            if n == chunk:
+                state, _ = run_chunk(state)
+            else:
+                for _ in range(n):
+                    state, _ = train_step(static, state, key, data)
+            done += n
+        return state
+    for i in range(num_iters):
+        state, loss = train_step(static, state, key, data)
+        if log_every and (i + 1) % log_every == 0:
+            print(f"  iter {i + 1:5d}  mean -ELBO/partition: {float(loss):.4f}")
+    return state
+
+
+# --------------------------------------------------------------------------
+# Prediction / evaluation
+# --------------------------------------------------------------------------
+
+
+def predict_local(
+    static: PSVGPStatic, state: PSVGPState, xstar: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Each partition's model predicts at its OWN rows of xstar (P, Q, d)."""
+    scfg = static.cfg.svgp
+
+    def one(params, xq):
+        return svgp.predict(params, static.cov_fn, xq, jitter=scfg.jitter, whitened=scfg.whitened)
+
+    return jax.vmap(one)(state.params, xstar)
+
+
+def predict_at_partitions(
+    static: PSVGPStatic, state: PSVGPState, part_ids: jnp.ndarray, points: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Predict ``points`` (E, Q, d) with the models of ``part_ids`` (E,)."""
+    params_e = jax.tree.map(lambda a: jnp.take(a, part_ids, axis=0), state.params)
+    scfg = static.cfg.svgp
+
+    def one(params, xq):
+        return svgp.predict(params, static.cov_fn, xq, jitter=scfg.jitter, whitened=scfg.whitened)
+
+    return jax.vmap(one)(params_e, points)

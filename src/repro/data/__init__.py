@@ -1,0 +1,4 @@
+from repro.data.spatial import e3sm_like_field, SpatialDataset
+from repro.data.tokens import synthetic_token_batches
+
+__all__ = ["e3sm_like_field", "SpatialDataset", "synthetic_token_batches"]

@@ -1,0 +1,26 @@
+"""Gaussian-process substrate: covariance functions, exact GP, likelihoods."""
+from repro.gp.covariances import (
+    CovarianceParams,
+    ard_distance2,
+    matern32,
+    matern52,
+    rbf,
+    make_covariance,
+    init_covariance_params,
+)
+from repro.gp.exact import exact_gp_logml, exact_gp_predict
+from repro.gp.likelihoods import gaussian_expected_loglik, poisson_expected_loglik
+
+__all__ = [
+    "CovarianceParams",
+    "ard_distance2",
+    "rbf",
+    "matern32",
+    "matern52",
+    "make_covariance",
+    "init_covariance_params",
+    "exact_gp_logml",
+    "exact_gp_predict",
+    "gaussian_expected_loglik",
+    "poisson_expected_loglik",
+]

@@ -1,0 +1,115 @@
+"""Stationary covariance functions with ARD lengthscales.
+
+All covariance functions take unconstrained ("log-space") parameters so the
+optimizer can run unconstrained SGD/Adam, matching the paper's setup where
+covariance hyperparameters kappa are learned jointly with the variational
+parameters (eq. 3).
+
+Shapes: X is (n, d), Z is (m, d). Output K(X, Z) is (n, m).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+
+_SQRT3 = 1.7320508075688772
+_SQRT5 = 2.23606797749979
+
+
+class CovarianceParams(NamedTuple):
+    """Unconstrained covariance hyperparameters (a pytree leaf bundle).
+
+    log_lengthscale: (d,) ARD log-lengthscales.
+    log_variance:    ()   log process variance sigma^2.
+    """
+
+    log_lengthscale: jnp.ndarray
+    log_variance: jnp.ndarray
+
+
+def init_covariance_params(
+    d: int, lengthscale: float = 1.0, variance: float = 1.0, dtype=jnp.float32
+) -> CovarianceParams:
+    return CovarianceParams(
+        log_lengthscale=jnp.full((d,), jnp.log(lengthscale), dtype=dtype),
+        log_variance=jnp.asarray(jnp.log(variance), dtype=dtype),
+    )
+
+
+def ard_distance2(x: jnp.ndarray, z: jnp.ndarray, log_lengthscale: jnp.ndarray) -> jnp.ndarray:
+    """Squared scaled distance sum_k (x_k - z_k)^2 / l_k^2, shape (n, m).
+
+    Uses the explicit-difference form (not the |x|^2+|z|^2-2xz expansion) for
+    numerical robustness at small distances; d is tiny (2-3) for spatial data
+    so the FLOP difference is irrelevant at this layer. The Pallas kernel in
+    ``repro.kernels.rbf`` makes the same choice for the same reason.
+    """
+    inv_l = jnp.exp(-log_lengthscale)  # (d,)
+    xs = x * inv_l  # (n, d)
+    zs = z * inv_l  # (m, d)
+    diff = xs[:, None, :] - zs[None, :, :]  # (n, m, d)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rbf(params: CovarianceParams, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    r2 = ard_distance2(x, z, params.log_lengthscale)
+    return jnp.exp(params.log_variance) * jnp.exp(-0.5 * r2)
+
+
+def matern32(params: CovarianceParams, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    r = jnp.sqrt(ard_distance2(x, z, params.log_lengthscale) + 1e-20)
+    return jnp.exp(params.log_variance) * (1.0 + _SQRT3 * r) * jnp.exp(-_SQRT3 * r)
+
+
+def matern52(params: CovarianceParams, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    r2 = ard_distance2(x, z, params.log_lengthscale)
+    r = jnp.sqrt(r2 + 1e-20)
+    return (
+        jnp.exp(params.log_variance)
+        * (1.0 + _SQRT5 * r + (5.0 / 3.0) * r2)
+        * jnp.exp(-_SQRT5 * r)
+    )
+
+
+def periodic_lon_rbf(params: CovarianceParams, x: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """RBF, periodic in the FIRST input dimension (longitude) with period
+    ``_LON_PERIOD`` in scaled units, plain RBF in the remaining dims.
+
+    k = s^2 exp(-2 sin^2(pi (x0-z0)/P) / l0^2 - 0.5 sum_{d>0} (xd-zd)^2/ld^2)
+
+    This lifts the 0/360-seam limitation documented in core/partition.py:
+    with a periodic covariance the grid may wrap in longitude (wrap_x=True)
+    and neighbor sampling across the seam becomes geometrically sound.
+    """
+    inv_l = jnp.exp(-params.log_lengthscale)
+    d_lon = x[:, None, 0] - z[None, :, 0]
+    s = jnp.sin(jnp.pi * d_lon / _LON_PERIOD)
+    r2 = 4.0 * (s * inv_l[0]) ** 2
+    diff = (x[:, None, 1:] - z[None, :, 1:]) * inv_l[1:]
+    r2 = r2 + jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(params.log_variance) * jnp.exp(-0.5 * r2)
+
+
+# data/spatial.py scales lon by 1/36 => full circle = 10 scaled units
+_LON_PERIOD = 10.0
+
+_REGISTRY: dict[str, Callable] = {
+    "rbf": rbf,
+    "matern32": matern32,
+    "matern52": matern52,
+    "periodic_lon_rbf": periodic_lon_rbf,
+}
+
+
+def make_covariance(name: str) -> Callable:
+    """Look up a covariance function by name (config-file friendly)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError as e:
+        raise ValueError(f"unknown covariance {name!r}; have {sorted(_REGISTRY)}") from e
+
+
+def kdiag(params: CovarianceParams, x: jnp.ndarray) -> jnp.ndarray:
+    """diag K(X, X) for any stationary kernel above: just the variance."""
+    return jnp.full((x.shape[0],), jnp.exp(params.log_variance), dtype=x.dtype)

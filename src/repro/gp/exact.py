@@ -1,0 +1,58 @@
+"""Exact (dense) GP — the O(n^3) reference the paper's eq. (2) describes.
+
+Used as the test oracle for the SVGP: the SVGP ELBO must lower-bound the
+exact log marginal likelihood, and SVGP predictions must converge to exact
+GP predictions as inducing points -> data points.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.gp.covariances import CovarianceParams
+
+_LOG2PI = 1.8378770664093453
+
+
+def _chol(params: CovarianceParams, cov_fn: Callable, x, log_beta, jitter):
+    n = x.shape[0]
+    knn = cov_fn(params, x, x)
+    noise = jnp.exp(-log_beta)  # beta is precision, noise variance = 1/beta
+    return jnp.linalg.cholesky(knn + (noise + jitter) * jnp.eye(n, dtype=knn.dtype))
+
+
+def exact_gp_logml(
+    params: CovarianceParams,
+    log_beta: jnp.ndarray,
+    cov_fn: Callable,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    jitter: float = 1e-6,
+) -> jnp.ndarray:
+    """log N(y | 0, K(X,X) + beta^{-1} I)."""
+    n = x.shape[0]
+    chol = _chol(params, cov_fn, x, log_beta, jitter)
+    alpha = jsl.cho_solve((chol, True), y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diagonal(chol)))
+    return -0.5 * (y @ alpha + logdet + n * _LOG2PI)
+
+
+def exact_gp_predict(
+    params: CovarianceParams,
+    log_beta: jnp.ndarray,
+    cov_fn: Callable,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    xstar: jnp.ndarray,
+    jitter: float = 1e-6,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Posterior mean and variance at xstar — the paper's eq. (2)."""
+    chol = _chol(params, cov_fn, x, log_beta, jitter)
+    ks = cov_fn(params, x, xstar)  # (n, n*)
+    alpha = jsl.cho_solve((chol, True), y)
+    mean = ks.T @ alpha
+    v = jsl.solve_triangular(chol, ks, lower=True)  # (n, n*)
+    var = jnp.exp(params.log_variance) - jnp.sum(v * v, axis=0)
+    return mean, jnp.maximum(var, 0.0)

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the SVGP ELBO hot path (+ jnp oracles).
+
+Validated in interpret mode on CPU; compiled via Mosaic on real TPUs.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

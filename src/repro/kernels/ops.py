@@ -1,0 +1,111 @@
+"""Jit'd dispatch wrappers around the Pallas kernels.
+
+Handles the TPU alignment contract (pad B to the sublane tile, m to the
+128 lane width, zero-pad W) and strips the padding from outputs, so callers
+(``repro.core.svgp._projection``) see clean shapes. On CPU the kernels run
+in interpret mode — same kernel body, Python evaluation — which is how this
+container validates them; on a real TPU backend they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import jax.scipy.linalg as jsl
+
+from repro.kernels import ref
+from repro.kernels.rbf import rbf_cross_cov_pallas
+from repro.kernels.svgp_proj import svgp_projection_pallas
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(n: int, k: int) -> int:
+    return ((n + k - 1) // k) * k
+
+
+def rbf_cross_cov(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """K(X, Z) via the Pallas kernel, padding-safe. x (B,d), z (m,d)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    B, d = x.shape
+    m = z.shape[0]
+    bb = min(_LANE, _round_up(B, _SUBLANE))
+    Bp, mp = _round_up(B, bb), _round_up(m, _LANE)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    zp = jnp.pad(z, ((0, mp - m), (0, 0)))
+    out = rbf_cross_cov_pallas(
+        xp, zp, log_lengthscale, log_variance, block_b=bb, interpret=interpret
+    )
+    return out[:B, :m]
+
+
+@jax.custom_vjp
+def svgp_projection(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    lmm: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused ELBO projection. lmm: (m, m) lower Cholesky of Kmm.
+
+    Returns (knm (B,m), lk_t (B,m), q_diag (B,)) with TRUE shapes.
+    The (m x m) triangular inversion W = Lmm^{-1} runs in XLA (one MXU tile;
+    see svgp_proj.py docstring), the O(B m^2) bulk in Pallas.
+
+    Differentiable via custom_vjp: the backward pass recomputes through the
+    pure-jnp reference (flash-attention-style rematerialization) — Pallas
+    kernels have no native autodiff rule, and the recompute keeps residual
+    memory at zero extra HBM.
+    """
+    interpret = _interpret_default()
+    B, d = x.shape
+    m = z.shape[0]
+    w = jsl.solve_triangular(lmm, jnp.eye(m, dtype=lmm.dtype), lower=True)
+    bb = min(_LANE, _round_up(B, _SUBLANE))
+    Bp, mp = _round_up(B, bb), _round_up(m, _LANE)
+    xp = jnp.pad(x, ((0, Bp - B), (0, 0)))
+    zp = jnp.pad(z, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, mp - m), (0, mp - m)))  # zero rows/cols: inert slots
+    knm, lkt, qd = svgp_projection_pallas(
+        xp, zp, log_lengthscale, log_variance, wp, block_b=bb, interpret=interpret
+    )
+    return knm[:B, :m], lkt[:B, :m], qd[:B]
+
+
+def _svgp_projection_fwd(x, z, log_lengthscale, log_variance, lmm):
+    out = svgp_projection(x, z, log_lengthscale, log_variance, lmm)
+    return out, (x, z, log_lengthscale, log_variance, lmm)
+
+
+def _svgp_projection_bwd(residuals, cotangents):
+    _, vjp = jax.vjp(svgp_projection_ref, *residuals)
+    return vjp(cotangents)
+
+
+def svgp_projection_ref(x, z, log_lengthscale, log_variance, lmm):
+    """Pure-jnp reference with the same signature (also the bwd path)."""
+    w = jsl.solve_triangular(lmm, jnp.eye(lmm.shape[0], dtype=lmm.dtype), lower=True)
+    return ref.svgp_projection(x, z, log_lengthscale, log_variance, w)
+
+
+svgp_projection.defvjp(_svgp_projection_fwd, _svgp_projection_bwd)
+
+
+# Reference implementation re-exported so benchmarks/tests can compare the
+# dispatch layer against the oracle through one import site.
+rbf_cross_cov_ref = ref.rbf_cross_cov

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: tiled ARD-RBF cross-covariance K(X, Z).
+
+TPU-native design (DESIGN.md §6): the paper's per-partition m is tiny
+(5..20), hopeless for the 128x128 MXU on its own — so the kernel is shaped
+for the BATCHED setting the PSVGP trainer actually runs: ``vmap`` over the
+partition axis adds a leading grid dimension (Pallas batching rule), and
+within one partition we tile the observation axis in ``block_b`` sublane
+rows while the (padded) inducing axis occupies the 128-wide lane dimension.
+
+Distance computation uses the explicit-difference form (not the
+|x|^2+|z|^2-2xz MXU expansion): spatial inputs have d = 2..3, so the
+contraction is lane-trivial and the subtract/square keeps full precision at
+short distances, where exp(-r2/2) has all its curvature. For d >= 8 a dot-
+based variant would win; spatial modeling never gets there.
+
+VMEM per grid step: block_b*(d + 2*m_pad) + m_pad*d floats — a few tens of
+KiB at the default (128, 128) tile, far under the ~16 MiB budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rbf_kernel_body(x_ref, z_ref, invl_ref, var_ref, out_ref):
+    """One (block_b x m_pad) output tile.
+
+    x_ref: (block_b, d) VMEM, z_ref: (m_pad, d) VMEM (fully resident),
+    invl_ref: (1, d) VMEM, var_ref: (1, 1) VMEM.
+    """
+    x = x_ref[...]  # (bb, d)
+    z = z_ref[...]  # (m, d)
+    inv_l = invl_ref[...]  # (1, d)
+    xs = x * inv_l  # scale once, reuse across the whole tile
+    zs = z * inv_l
+    # (bb, 1, d) - (1, m, d) -> (bb, m, d): explicit diff, VPU elementwise.
+    diff = xs[:, None, :] - zs[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)  # (bb, m)
+    out_ref[...] = var_ref[0, 0] * jnp.exp(-0.5 * r2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def rbf_cross_cov_pallas(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """K(X, Z) for x (B, d), z (m, d) -> (B, m).
+
+    Caller contract (enforced by ops.py): B % block_b == 0 and m % 128 == 0
+    (pad with arbitrary rows; padded outputs are garbage the caller strips).
+    """
+    B, d = x.shape
+    m, _ = z.shape
+    grid = (B // block_b,)
+    inv_l = jnp.exp(-log_lengthscale).reshape(1, d).astype(x.dtype)
+    var = jnp.exp(log_variance).reshape(1, 1).astype(x.dtype)
+    return pl.pallas_call(
+        _rbf_kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),  # x tile marches over B
+            pl.BlockSpec((m, d), lambda i: (0, 0)),  # z resident every step
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, m), x.dtype),
+        interpret=interpret,
+    )(x, z, inv_l, var)

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+These mirror what ``repro.gp.covariances`` / ``repro.core.svgp`` compute, but
+are kept dependency-free and in the exact input convention of the kernels so
+tests compare kernel output to THIS file, and this file is itself covered by
+tests against the gp/ implementations.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def rbf_cross_cov(
+    x: jnp.ndarray, z: jnp.ndarray, log_lengthscale: jnp.ndarray, log_variance: jnp.ndarray
+) -> jnp.ndarray:
+    """ARD-RBF K(X,Z): exp(lv) * exp(-0.5 sum_d (x_d - z_d)^2 / l_d^2).
+
+    x: (n, d), z: (m, d) -> (n, m).
+    """
+    inv_l = jnp.exp(-log_lengthscale)
+    diff = x[:, None, :] * inv_l - z[None, :, :] * inv_l
+    r2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.exp(log_variance) * jnp.exp(-0.5 * r2)
+
+
+def svgp_projection(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused SVGP projection (the O(B m^2) ELBO hot path).
+
+    w: (m, m) = Lmm^{-1} (dense lower-triangular inverse of chol(Kmm)).
+    Returns:
+      knm    (B, m)  cross-covariance K(X, Z)
+      lk_t   (B, m)  K(X,Z) @ W^T  (row i = (Lmm^{-1} k_i)^T)
+      q_diag (B,)    ||Lmm^{-1} k_i||^2 = k_i^T Kmm^{-1} k_i
+    """
+    knm = rbf_cross_cov(x, z, log_lengthscale, log_variance)
+    lk_t = knm @ w.T
+    q_diag = jnp.sum(lk_t * lk_t, axis=-1)
+    return knm, lk_t, q_diag

@@ -1,0 +1,325 @@
+"""Attention variants: GQA (w/ qk-norm, biases, sliding window) and MLA.
+
+Cache convention (serve path): a dict per attention block,
+  GQA:  {"k": (B, S_cache, KV, hd), "v": (B, S_cache, KV, hd)}
+  MLA:  {"c_kv": (B, S_cache, kv_rank), "k_rope": (B, S_cache, rope_dim)}
+plus the scalar write position carried by the caller. Sliding-window blocks
+allocate only ``window`` slots and write modulo window (ring buffer) — this
+is what makes long_500k decode O(window) for SWA architectures.
+
+MLA decode uses the ABSORBED form (q projected into latent space, attention
+performed against the compressed c_kv directly), so per-step cost scales
+with kv_rank, not with H*hd — the whole point of caching latents.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (
+    Params,
+    apply_rope,
+    causal_mask,
+    dense_init,
+    rms_norm,
+    rope_angles,
+    window_mask,
+)
+from repro.models.config import MLAConfig, ModelConfig
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+
+def init_gqa_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd)),
+        "wk": dense_init(ks[1], (D, KV * hd)),
+        "wv": dense_init(ks[2], (D, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, num_kv: int) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+    q (B,S,H,hd), k/v (B,T,KV,hd), mask (S,T) or (B,S,T) bool."""
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    G = H // num_kv
+    qg = q.reshape(B, S, num_kv, G, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(hd).astype(jnp.float32)
+    m = mask if mask.ndim == 3 else mask[None]
+    logits = jnp.where(m[:, None, None, :, :], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, hd)
+
+
+def _sdpa_chunked(q, k, v, num_kv: int, window: int, chunk: int) -> jnp.ndarray:
+    """Query-chunked causal/windowed attention (§Perf memory lever).
+
+    The full (B, KV, G, S, S) fp32 logits tensor dominates activation
+    memory whenever heads cannot shard (e.g. 14 heads on a 16-wide model
+    axis). lax.map over query chunks serializes it to (.., chunk, S), and
+    jax.checkpoint on the chunk body keeps backward residuals linear in S
+    (flash-attention-via-remat; exact same math, reassociated)."""
+    B, S, H, hd = q.shape
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(args):
+        qi, ci = args
+        off = ci * chunk
+        m = window_mask(chunk, S, window, off) if window else causal_mask(chunk, S, off)
+        return _sdpa(qi, k, v, m, num_kv)
+
+    out = jax.lax.map(body, (qc, jnp.arange(nc)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def gqa_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    window: int = 0,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    encoder_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """One attention call.
+
+    Modes:
+      train/prefill: cache None (train) or empty-allocated (prefill fills it)
+      decode: x (B, 1, D), cache holds history, cache_pos = current length
+      cross-attention: encoder_kv given — no cache mutation, no causal mask.
+    """
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+
+    if encoder_kv is not None:
+        k, v = encoder_kv
+        q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+        T = k.shape[1]
+        mask = jnp.ones((S, T), bool)
+        out = _sdpa(q, k, v, mask, KV)
+        return out.reshape(B, S, H * hd) @ p["wo"].astype(dt), None
+
+    q, k, v = _qkv(p, cfg, x)
+    if cfg.pos_kind == "rope":
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        # --- training / encoder self-attention: full sequence ---
+        qc = cfg.attn_q_chunk
+        if qc and S > qc and S % qc == 0:
+            out = _sdpa_chunked(q, k, v, KV, window, qc)
+        else:
+            mask = window_mask(S, S, window) if window else causal_mask(S, S)
+            out = _sdpa(q, k, v, mask, KV)
+        new_cache = None
+    elif S > 1:
+        # --- prefill: fill the cache, attend within the prompt ---
+        mask = window_mask(S, S, window) if window else causal_mask(S, S)
+        out = _sdpa(q, k, v, mask, KV)
+        Sc = cache["k"].shape[1]
+        if window and S >= Sc:
+            # ring cache: slot s holds the key of absolute position
+            # base + (s - base) % Sc (the unique position in [S-Sc, S) that
+            # decode's slot = pos % Sc addressing maps to slot s)
+            base = S - Sc
+            take_ids = base + (jnp.arange(Sc) - base) % Sc
+            kk = jnp.take(k, take_ids, axis=1).astype(cache["k"].dtype)
+            vv = jnp.take(v, take_ids, axis=1).astype(cache["v"].dtype)
+            new_cache = {"k": kk, "v": vv}
+        elif window:
+            # prompt shorter than the window: slots [0, S) in order
+            kk = cache["k"].at[:, :S].set(k.astype(cache["k"].dtype))
+            vv = cache["v"].at[:, :S].set(v.astype(cache["v"].dtype))
+            new_cache = {"k": kk, "v": vv}
+        else:
+            kk = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), 0, 1)
+            vv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), 0, 1)
+            new_cache = {"k": kk, "v": vv}
+    else:
+        # --- decode: single step against the cache ---
+        Sc = cache["k"].shape[1]
+        slot = (cache_pos % Sc) if window else cache_pos
+        kk = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        vv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": kk, "v": vv}
+        ar = jnp.arange(Sc)
+        if window:
+            valid = (ar <= slot) | (cache_pos >= Sc)  # ring full => all valid
+        else:
+            valid = ar <= cache_pos
+        mask = valid[None, None, :]  # (B=1bc, S=1, T)
+        out = _sdpa(q, kk.astype(dt), vv.astype(dt), mask, KV)
+
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(dt), new_cache
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, seq: int, window: int, dtype) -> Params:
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    Sc = min(seq, window) if window else seq
+    return {
+        "k": jnp.zeros((batch, Sc, KV, hd), dtype),
+        "v": jnp.zeros((batch, Sc, KV, hd), dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention)
+# --------------------------------------------------------------------------
+
+
+def init_mla_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    a: MLAConfig = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qd = a.qk_nope_head_dim + a.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], (D, a.q_lora_rank)),
+        "q_norm": jnp.ones((a.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (a.q_lora_rank, H * qd)),
+        "w_dkv": dense_init(ks[2], (D, a.kv_lora_rank)),
+        "kv_norm": jnp.ones((a.kv_lora_rank,), jnp.float32),
+        "w_kr": dense_init(ks[3], (D, a.qk_rope_head_dim)),
+        "w_uk": dense_init(ks[4], (a.kv_lora_rank, H * a.qk_nope_head_dim)),
+        "w_uv": dense_init(ks[5], (a.kv_lora_rank, H * a.v_head_dim)),
+        "wo": dense_init(ks[6], (H * a.v_head_dim, D)),
+    }
+
+
+def mla_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    a: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = a.qk_nope_head_dim, a.qk_rope_head_dim, a.v_head_dim
+    dt = x.dtype
+    scale = 1.0 / jnp.sqrt(dn + dr)
+
+    cq = rms_norm(x @ p["w_dq"].astype(dt), p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"].astype(dt)).reshape(B, S, H, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    qr = apply_rope(qr, cos, sin)
+
+    c_kv = rms_norm(x @ p["w_dkv"].astype(dt), p["kv_norm"], cfg.norm_eps)  # (B,S,r)
+    kr = (x @ p["w_kr"].astype(dt)).reshape(B, S, 1, dr)
+    kr = apply_rope(kr, cos, sin)[:, :, 0]  # (B,S,dr) shared across heads
+
+    if cache is None or S > 1:
+        # train / prefill: expand latents directly (compute-bound path)
+        kn = (c_kv @ p["w_uk"].astype(dt)).reshape(B, S, H, dn)
+        v = (c_kv @ p["w_uv"].astype(dt)).reshape(B, S, H, dv)
+
+        def _mla_block(qn_i, qr_i, off):
+            lg = (
+                jnp.einsum("bshd,bthd->bhst", qn_i, kn)
+                + jnp.einsum("bshd,btd->bhst", qr_i, kr)
+            ).astype(jnp.float32) * scale
+            m = causal_mask(qn_i.shape[1], S, off)
+            lg = jnp.where(m[None, None], lg, _NEG_INF)
+            w = jax.nn.softmax(lg, axis=-1).astype(dt)
+            return jnp.einsum("bhst,bthd->bshd", w, v)
+
+        qc = cfg.attn_q_chunk
+        if cache is None and qc and S > qc and S % qc == 0:
+            # query-chunked MLA (same §Perf memory lever as _sdpa_chunked)
+            nc = S // qc
+            qn_c = qn.reshape(B, nc, qc, H, dn).transpose(1, 0, 2, 3, 4)
+            qr_c = qr.reshape(B, nc, qc, H, dr).transpose(1, 0, 2, 3, 4)
+
+            @jax.checkpoint
+            def body(args):
+                qn_i, qr_i, ci = args
+                return _mla_block(qn_i, qr_i, ci * qc)
+
+            out = jax.lax.map(body, (qn_c, qr_c, jnp.arange(nc)))
+            out = out.transpose(1, 0, 2, 3, 4).reshape(B, S, H * dv)
+        else:
+            out = _mla_block(qn, qr, 0).reshape(B, S, H * dv)
+        new_cache = None
+        if cache is not None:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, 1)
+            kk = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr.astype(cache["k_rope"].dtype), 0, 1)
+            new_cache = {"c_kv": ck, "k_rope": kk}
+    else:
+        # decode: ABSORBED attention against compressed latents
+        ck = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0))
+        kk = jax.lax.dynamic_update_slice(cache["k_rope"], kr.astype(cache["k_rope"].dtype), (0, cache_pos, 0))
+        new_cache = {"c_kv": ck, "k_rope": kk}
+        T = ck.shape[1]
+        w_uk = p["w_uk"].astype(dt).reshape(a.kv_lora_rank, H, dn)
+        q_lat = jnp.einsum("bshd,rhd->bshr", qn, w_uk)  # (B,1,H,r)
+        logits = (
+            jnp.einsum("bshr,btr->bhst", q_lat, ck.astype(dt))
+            + jnp.einsum("bshd,btd->bhst", qr, kk.astype(dt))
+        ).astype(jnp.float32) * scale
+        valid = jnp.arange(T) <= cache_pos
+        logits = jnp.where(valid[None, None, None], logits, _NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhst,btr->bshr", w, ck.astype(dt))  # (B,1,H,r)
+        w_uv = p["w_uv"].astype(dt).reshape(a.kv_lora_rank, H, dv)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv).reshape(B, S, H * dv)
+
+    return out @ p["wo"].astype(dt), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, seq: int, dtype) -> Params:
+    a: MLAConfig = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq, a.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq, a.qk_rope_head_dim), dtype),
+    }

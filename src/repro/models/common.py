@@ -1,0 +1,121 @@
+"""Shared neural building blocks: norms, RoPE, MLPs, initializers.
+
+Params are plain nested dicts of jnp arrays (pytrees): no framework dep,
+trivially checkpointable, and sharding rules match on dict paths.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], in_axis: int = 0) -> jnp.ndarray:
+    """LeCun-normal in fp32 (params are always fp32; activations may be bf16)."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return (jax.random.normal(key, shape) * 0.02).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    return (((x32 - mu) * jax.lax.rsqrt(var + eps)) * scale + bias).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) -> cos/sin tables (..., dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (B, S, H, hd) with cos/sin (S, hd/2) — rotate-half convention.
+
+    Positions are shared across the batch (no per-row offsets in this
+    framework's pipelines), so the tables broadcast as (1, S, 1, hd/2).
+    """
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, :, None, :].astype(jnp.float32)
+    s = sin[None, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, kind: str) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff)),
+            "w_up": dense_init(k2, (d_model, d_ff)),
+            "w_down": dense_init(k3, (d_ff, d_model)),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": dense_init(k1, (d_model, d_ff)),
+            "b_up": jnp.zeros((d_ff,), jnp.float32),
+            "w_down": dense_init(k2, (d_ff, d_model)),
+            "b_down": jnp.zeros((d_model,), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    dt = x.dtype
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"].astype(dt))
+        return (gate * (x @ p["w_up"].astype(dt))) @ p["w_down"].astype(dt)
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+        return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+    raise ValueError(kind)
+
+
+def causal_mask(sq: int, skv: int, offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """(sq, skv) bool mask: query i attends kv j iff j <= i + offset."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    return kj <= qi
+
+
+def window_mask(sq: int, skv: int, window: int, offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    """Causal + sliding window: i - window < j <= i (absolute positions)."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(skv)[None, :]
+    return (kj <= qi) & (kj > qi - window)

@@ -1,0 +1,120 @@
+"""RG-LRU temporal-mixing block (Griffin / RecurrentGemma).
+
+Block structure (De et al. 2024, arXiv:2402.19427):
+    x -> [branch a] linear -> GeLU
+      -> [branch b] linear -> causal conv1d(w=4) -> RG-LRU
+    out = W_out (a * b)
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_r u_t),  i_t = sigmoid(W_i u_t)
+    a_t = exp(c * r_t * (-softplus(lam)))          # lam learned, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is linear in h, so training uses ``jax.lax.associative_scan``
+— log-depth on TPU, the JAX-native stand-in for Griffin's custom linear-scan
+kernel (DESIGN.md hardware-adaptation table). Decode is the exact one-step
+update with (conv window, h) carried as cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+from repro.models.config import ModelConfig
+
+_C = 8.0
+
+
+def init_rglru_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    W = cfg.rnn_width or cfg.d_model
+    cw = cfg.conv_width
+    ks = jax.random.split(key, 6)
+    # lam init so that a^c spreads over ~(0.9, 0.999) (Griffin's init range)
+    u = jax.random.uniform(ks[5], (W,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^{-1}(-log u / c)
+    return {
+        "w_a": dense_init(ks[0], (D, W)),
+        "w_b": dense_init(ks[1], (D, W)),
+        "conv": (jax.random.normal(ks[2], (cw, W)) / jnp.sqrt(cw)).astype(jnp.float32),
+        "w_r": dense_init(ks[3], (W, W)),
+        "w_i": dense_init(ks[4], (W, W)),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(jax.random.fold_in(key, 9), (W, D)),
+    }
+
+
+def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, state: Optional[jnp.ndarray]):
+    """Depthwise causal conv. u (B, S, W), kernel (cw, W).
+    state (B, cw-1, W) holds the trailing inputs for streaming decode."""
+    cw = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, S+cw-1, W)
+    out = sum(full[:, i : i + u.shape[1]] * kernel[i].astype(u.dtype) for i in range(cw))
+    new_state = full[:, -(cw - 1) :] if cw > 1 else None
+    return out, new_state
+
+
+def _rglru_scan(u: jnp.ndarray, a: jnp.ndarray, h0: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t via associative scan. u=b (B,S,W), a (B,S,W)."""
+    if h0 is not None:
+        # fold the initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0[:, None].astype(u.dtype), u], axis=1)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    return h[:, 1:] if h0 is not None else h
+
+
+def rglru_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x (B, S, D) -> (out (B, S, D), new cache {"conv", "h"})."""
+    dt = x.dtype
+    branch_a = jax.nn.gelu(x @ p["w_a"].astype(dt))  # (B,S,W)
+    u = x @ p["w_b"].astype(dt)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_state)
+
+    r = jax.nn.sigmoid(u @ p["w_r"].astype(dt)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(dt)).astype(jnp.float32)
+    log_a = -_C * r * jax.nn.softplus(p["lam"])  # (B,S,W) fp32, <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+
+    if cache is None:
+        h = _rglru_scan(gated, a, None)
+        new_cache = None
+    elif x.shape[1] > 1:
+        h = _rglru_scan(gated, a, cache["h"])
+        new_cache = {"conv": new_conv, "h": h[:, -1].astype(cache["h"].dtype)}
+    else:
+        h_prev = cache["h"].astype(jnp.float32)
+        h = (a[:, 0] * h_prev + gated[:, 0])[:, None]
+        new_cache = {"conv": new_conv, "h": h[:, 0].astype(cache["h"].dtype)}
+
+    out = (branch_a * h.astype(dt)) @ p["w_out"].astype(dt)
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    W = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),  # recurrent state stays fp32
+    }

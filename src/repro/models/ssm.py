@@ -1,0 +1,270 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, Beck et al. 2024):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (per head; C is dk x dv)
+    n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, 1)
+
+TPU adaptation (DESIGN.md): training uses the CHUNKWISE form — within a
+chunk of length c the contribution of in-chunk tokens is a masked
+attention-like (c x c) matmul (MXU work), and only chunk-boundary states
+are carried through a short lax.scan (S/c steps). This bounds scan length
+and residual memory, where the naive per-token scan would carry the full
+(dk x dv) matrix state S times. Gates: f = sigmoid(f~) (decay <= 1 keeps
+the in-chunk decay ratios d_t/d_s <= 1, so no log-space max-stabilizer is
+needed — a documented simplification of the paper's exp-gate option),
+i = exp(clamped i~).
+
+sLSTM (scalar memory, genuinely nonlinear recurrence via h_{t-1} feedback)
+cannot be parallelized over time; it runs as a true lax.scan. Its carries
+are O(width) vectors so the memory is fine at any S.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, rms_norm
+from repro.models.config import ModelConfig
+
+_ICLAMP = 8.0  # clamp on the exp input-gate preactivation
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    inner = cfg.rnn_width or 2 * cfg.d_model
+    H = cfg.num_heads
+    dh = inner // H  # per-head q/k/v dim
+    return inner, H, dh
+
+
+def init_mlstm_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    inner, H, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (D, inner)),  # main branch
+        "w_gate": dense_init(ks[1], (D, inner)),  # output gating branch
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, inner)) / cfg.conv_width).astype(jnp.float32),
+        "wq": dense_init(ks[3], (inner, inner)),
+        "wk": dense_init(ks[4], (inner, inner)),
+        "wv": dense_init(ks[5], (inner, inner)),
+        "w_if": dense_init(ks[6], (inner, 2 * H)),  # input & forget gates per head
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "out_norm": jnp.ones((inner,), jnp.float32),
+        "w_down": dense_init(ks[7], (inner, D)),
+    }
+
+
+def _chunk_mlstm(q, k, v, i_gate, f_gate, state, norm):
+    """One chunk. q,k,v (B,H,c,dh); i/f gates (B,H,c); state (B,H,dh,dh);
+    norm (B,H,dh). Returns h (B,H,c,dh), new state, new norm."""
+    Bc = q.shape[2]
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    logf = jnp.log(f_gate + 1e-12)  # <= 0
+    cum = jnp.cumsum(logf, axis=-1)  # (B,H,c) log d_t
+    d = jnp.exp(cum)
+    # intra-chunk "attention": A[t,s] = (d_t/d_s) i_s (q_t . k_s), s <= t
+    ratio = jnp.exp(cum[..., :, None] - cum[..., None, :])  # (B,H,c,c) = d_t/d_s
+    mask = jnp.tril(jnp.ones((Bc, Bc), bool))
+    ratio = jnp.where(mask, ratio, 0.0)
+    decay_w = ratio * i_gate[..., None, :]  # (B,H,t,s) = (d_t/d_s) i_s, masked
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * decay_w
+    intra = jnp.einsum("bhts,bhsd->bhtd", scores, v)
+    # normalizer numerator n_t = d_t n_0 + sum_s (d_t/d_s) i_s k_s (q-free)
+    intra_n = jnp.einsum("bhts,bhsd->bhtd", decay_w, k)
+    # inter-chunk: contribution of the incoming state
+    inter = d[..., None] * jnp.einsum("bhtd,bhde->bhte", q, state)
+    inter_n = d[..., None] * norm[:, :, None, :]
+    h_num = intra + inter
+    n_vec = intra_n + inter_n  # (B,H,c,dh)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhtd,bhtd->bht", n_vec, q)), 1.0)
+    h = h_num / denom[..., None]
+    # chunk-end state: C_c = d_c C_0 + sum_s (d_c/d_s) i_s k_s v_s^T
+    w = (jnp.exp(cum[..., -1:] - cum) * i_gate)[..., None]  # (B,H,c,1)
+    new_state = d[..., -1, None, None] * state + jnp.einsum("bhsd,bhse->bhde", k * w, v)
+    new_norm = d[..., -1, None] * norm + jnp.sum(k * w, axis=2)
+    return h, new_state, new_norm
+
+
+def mlstm_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    cache: Optional[Params] = None,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """x (B, S, D) -> (out, cache {"conv","state","norm"})."""
+    from repro.models.rglru import _causal_conv  # shared depthwise conv
+
+    B, S, D = x.shape
+    inner, H, dh = _mlstm_dims(cfg)
+    dt = x.dtype
+    z = x @ p["w_gate"].astype(dt)  # output gate branch
+    u = x @ p["w_up"].astype(dt)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_state)
+    u = jax.nn.silu(u)
+
+    def heads(w):
+        return (u @ w.astype(dt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]) / jnp.sqrt(dh), heads(p["wv"])
+    gates = (u @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"]  # (B,S,2H)
+    i_gate = jnp.exp(jnp.minimum(gates[..., :H], _ICLAMP)).transpose(0, 2, 1)  # (B,H,S)
+    f_gate = jax.nn.sigmoid(gates[..., H:]).transpose(0, 2, 1)
+
+    state = (
+        cache["state"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, H, dh, dh), jnp.float32)
+    )
+    norm = (
+        cache["norm"].astype(jnp.float32)
+        if cache is not None
+        else jnp.zeros((B, H, dh), jnp.float32)
+    )
+
+    if S == 1 and cache is not None:
+        # decode: exact single-step recurrence
+        f1 = f_gate[..., 0][..., None, None]
+        i1 = i_gate[..., 0][..., None, None]
+        new_state = f1 * state + i1 * (k[:, :, 0, :, None] * v[:, :, 0, None, :])
+        new_norm = f1[..., 0] * norm + i1[..., 0] * k[:, :, 0]
+        hq = jnp.einsum("bhde,bhd->bhe", new_state, q[:, :, 0].astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", new_norm, q[:, :, 0].astype(jnp.float32))), 1.0
+        )
+        h = (hq / den[..., None])[:, :, None]  # (B,H,1,dh)
+    else:
+        pad = (-S) % chunk
+        if pad:
+            zpad = lambda a, ax: jnp.pad(a, [(0, pad if i == ax else 0) for i in range(a.ndim)])
+            q, k, v = zpad(q, 2), zpad(k, 2), zpad(v, 2)
+            i_gate = zpad(i_gate, 2)
+            f_gate = jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
+        nch = q.shape[2] // chunk
+        resh = lambda a: a.reshape(B, H, nch, chunk, -1).transpose(2, 0, 1, 3, 4)
+        qc, kc, vc = resh(q), resh(k), resh(v)
+        gi = i_gate.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
+        gf = f_gate.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
+
+        def body(carry, xs):
+            st, nm = carry
+            qx, kx, vx, ix, fx = xs
+            h, st2, nm2 = _chunk_mlstm(qx, kx, vx, ix, fx, st, nm)
+            return (st2, nm2), h
+
+        (new_state, new_norm), hs = jax.lax.scan(body, (state, norm), (qc, kc, vc, gi, gf))
+        h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, nch * chunk, dh)[:, :, :S]
+
+    hflat = h.transpose(0, 2, 1, 3).reshape(B, S, inner).astype(dt)
+    hflat = rms_norm(hflat, p["out_norm"], cfg.norm_eps)
+    out = (hflat * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv": new_conv,
+            "state": new_state.astype(cache["state"].dtype),
+            "norm": new_norm.astype(cache["norm"].dtype),
+        }
+    return out, new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    inner, H, dh = _mlstm_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, inner), dtype),
+        "state": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "norm": jnp.zeros((batch, H, dh), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def init_slstm_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    D = cfg.d_model
+    W = cfg.rnn_width or cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (D, 4 * W)),  # z, i, f, o preactivations
+        "r": dense_init(ks[1], (W, 4 * W)),  # recurrent weights (h feedback)
+        "b": jnp.zeros((4 * W,), jnp.float32).at[2 * W : 3 * W].set(1.0),
+        "out_norm": jnp.ones((W,), jnp.float32),
+        "w_down": dense_init(ks[2], (W, D)),
+    }
+
+
+def slstm_forward(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    cache: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Sequential sLSTM with stabilized exponential gating.
+
+    Carries (c, n, h, m): cell, normalizer, hidden, log-max stabilizer.
+    """
+    B, S, D = x.shape
+    W = cfg.rnn_width or cfg.d_model
+    dt = x.dtype
+    pre = (x @ p["w_in"].astype(dt)).astype(jnp.float32)  # (B,S,4W)
+
+    if cache is not None:
+        c0 = cache["c"].astype(jnp.float32)
+        n0 = cache["n"].astype(jnp.float32)
+        h0 = cache["h"].astype(jnp.float32)
+        m0 = cache["m"].astype(jnp.float32)
+    else:
+        c0 = n0 = h0 = jnp.zeros((B, W), jnp.float32)
+        m0 = jnp.full((B, W), -1e30, jnp.float32)
+
+    r = p["r"].astype(jnp.float32)
+    b = p["b"]
+
+    def step(carry, pre_t):
+        c, n, h, m = carry
+        g = pre_t + h @ r + b  # (B, 4W)
+        z_t = jnp.tanh(g[:, :W])
+        i_t = g[:, W : 2 * W]  # log-space input gate
+        f_t = jax.nn.log_sigmoid(g[:, 2 * W : 3 * W])  # log forget
+        o_t = jax.nn.sigmoid(g[:, 3 * W :])
+        m2 = jnp.maximum(f_t + m, i_t)
+        ip = jnp.exp(i_t - m2)
+        fp = jnp.exp(f_t + m - m2)
+        c2 = fp * c + ip * z_t
+        n2 = fp * n + ip
+        h2 = o_t * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, h2, m2), h2
+
+    (c_f, n_f, h_f, m_f), hs = jax.lax.scan(step, (c0, n0, h0, m0), pre.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(dt)  # (B,S,W)
+    h = rms_norm(h, p["out_norm"], cfg.norm_eps)
+    out = h @ p["w_down"].astype(dt)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "c": c_f.astype(cache["c"].dtype),
+            "n": n_f.astype(cache["n"].dtype),
+            "h": h_f.astype(cache["h"].dtype),
+            "m": m_f.astype(cache["m"].dtype),
+        }
+    return out, new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    W = cfg.rnn_width or cfg.d_model
+    z = lambda: jnp.zeros((batch, W), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, W), -1e30, jnp.float32)}

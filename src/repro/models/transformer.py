@@ -1,0 +1,418 @@
+"""Model assembly: pattern-period scan over composable blocks.
+
+A LAYER is a temporal-mixing block (attn / local_attn / mla / mlstm /
+slstm / rglru) plus — unless ``mlp_kind == "none"`` — a feed-forward block
+(dense SwiGLU/GeLU, or MoE for MoE archs), each pre-normed with residuals.
+
+Layers are grouped into PATTERN PERIODS (cfg.block_pattern). Parameters of
+all full periods are stacked on a leading axis and the forward pass scans
+over them, so the traced program is O(period), not O(num_layers) — the only
+way an 80-layer config lowers tractably with 512 virtual devices on one CPU
+(DESIGN.md §5). A partial trailing period ("remainder") and an optional
+dense "prelude" layer (DeepSeekMoE's dense layer 0) stay unstacked.
+
+KV / recurrent caches mirror the parameter structure:
+    {"prelude": c?, "stack": stacked over periods, "remainder": [c...]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import (
+    Params,
+    apply_mlp,
+    dense_init,
+    embed_init,
+    init_mlp,
+    rms_norm,
+)
+from repro.models.config import ModelConfig
+
+Cache = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# single layer
+# --------------------------------------------------------------------------
+
+
+def _init_mixing(key, cfg: ModelConfig, kind: str) -> Params:
+    if kind in ("attn", "local_attn"):
+        return attn.init_gqa_params(key, cfg)
+    if kind == "mla":
+        return attn.init_mla_params(key, cfg)
+    if kind == "mlstm":
+        return ssm_lib.init_mlstm_params(key, cfg)
+    if kind == "slstm":
+        return ssm_lib.init_slstm_params(key, cfg)
+    if kind == "rglru":
+        return rglru_lib.init_rglru_params(key, cfg)
+    raise ValueError(kind)
+
+
+def init_layer_params(
+    key: jax.Array, cfg: ModelConfig, kind: str, *, dense_ffn: bool = False, cross: bool = False
+) -> Params:
+    """One layer: mixing + optional FFN (+ optional cross-attention)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), jnp.float32), "mix": _init_mixing(k1, cfg, kind)}
+    if cross:
+        p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["cross"] = attn.init_gqa_params(k4, cfg)
+    if cfg.mlp_kind != "none":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        if cfg.moe is not None and not dense_ffn:
+            p["moe"] = moe_lib.init_moe_params(k2, cfg)
+        else:
+            d_ff = cfg.moe.dense_d_ff if (cfg.moe is not None and dense_ffn) else cfg.d_ff
+            p["mlp"] = init_mlp(k3, cfg.d_model, d_ff, _mlp_kind(cfg))
+    return p
+
+
+def _mlp_kind(cfg: ModelConfig) -> str:
+    return "gelu" if cfg.mlp_kind == "gelu" else "swiglu"
+
+
+def init_layer_cache(
+    cfg: ModelConfig, kind: str, batch: int, seq: int, dtype, cross_len: int = 0
+) -> Cache:
+    if kind == "attn":
+        c = attn.init_gqa_cache(cfg, batch, seq, 0, dtype)
+    elif kind == "local_attn":
+        c = attn.init_gqa_cache(cfg, batch, seq, cfg.sliding_window, dtype)
+    elif kind == "mla":
+        c = attn.init_mla_cache(cfg, batch, seq, dtype)
+    elif kind == "mlstm":
+        c = ssm_lib.init_mlstm_cache(cfg, batch, dtype)
+    elif kind == "slstm":
+        c = ssm_lib.init_slstm_cache(cfg, batch, dtype)
+    elif kind == "rglru":
+        c = rglru_lib.init_rglru_cache(cfg, batch, dtype)
+    else:
+        raise ValueError(kind)
+    if cross_len:
+        KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        c = dict(c)
+        c["cross_k"] = jnp.zeros((batch, cross_len, KV, hd), dtype)
+        c["cross_v"] = jnp.zeros((batch, cross_len, KV, hd), dtype)
+    return c
+
+
+def layer_forward(
+    p: Params,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    cache: Optional[Cache] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    encoder_out: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix_cache = None
+    if cache is not None:
+        mix_cache = {k: v for k, v in cache.items() if not k.startswith("cross_")}
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        out, new_mix = attn.gqa_forward(
+            p["mix"], cfg, h, positions, window=window, cache=mix_cache, cache_pos=cache_pos
+        )
+    elif kind == "mla":
+        out, new_mix = attn.mla_forward(p["mix"], cfg, h, positions, cache=mix_cache, cache_pos=cache_pos)
+    elif kind == "mlstm":
+        out, new_mix = ssm_lib.mlstm_forward(p["mix"], cfg, h, cache=mix_cache)
+    elif kind == "slstm":
+        out, new_mix = ssm_lib.slstm_forward(p["mix"], cfg, h, cache=mix_cache)
+    elif kind == "rglru":
+        out, new_mix = rglru_lib.rglru_forward(p["mix"], cfg, h, cache=mix_cache)
+    else:
+        raise ValueError(kind)
+    x = x + out
+
+    new_cache: Optional[Cache] = None
+    if cache is not None:
+        new_cache = dict(new_mix or {})
+
+    if "cross" in p:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if cache is not None and "cross_k" in cache and encoder_out is None:
+            kv = (cache["cross_k"].astype(x.dtype), cache["cross_v"].astype(x.dtype))
+            out, _ = attn.gqa_forward(p["cross"], cfg, hx, positions, encoder_kv=kv)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            # prefill / training: project encoder output to cross K/V
+            B, T, _ = encoder_out.shape
+            KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            dt = x.dtype
+            ck = (encoder_out @ p["cross"]["wk"].astype(dt)).reshape(B, T, KV, hd)
+            cv = (encoder_out @ p["cross"]["wv"].astype(dt)).reshape(B, T, KV, hd)
+            out, _ = attn.gqa_forward(p["cross"], cfg, hx, positions, encoder_kv=(ck, cv))
+            if cache is not None:
+                new_cache["cross_k"] = ck.astype(cache["cross_k"].dtype)
+                new_cache["cross_v"] = cv.astype(cache["cross_v"].dtype)
+        x = x + out
+
+    if "moe" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, aux = moe_lib.moe_forward(p["moe"], cfg, h)
+        x = x + out
+    elif "mlp" in p:
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, _mlp_kind(cfg))
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# whole-model parameters
+# --------------------------------------------------------------------------
+
+
+def init_model_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    keys = jax.random.split(key, 10)
+    D, V = cfg.d_model, cfg.padded_vocab_size
+    p: Params = {"embed": embed_init(keys[0], (V, D))}
+    if cfg.pos_kind == "learned":
+        p["pos_embed"] = embed_init(keys[1], (cfg.max_position, D))
+
+    prelude_dense = cfg.moe is not None and cfg.moe.first_layer_dense
+    n_scan = cfg.num_layers - (1 if prelude_dense else 0)
+    period = cfg.period
+    n_periods = n_scan // period
+    rem = cfg.block_pattern[: n_scan % period]
+
+    if prelude_dense:
+        p["prelude"] = init_layer_params(keys[2], cfg, cfg.block_pattern[0], dense_ffn=True)
+
+    cross = cfg.encoder is not None
+
+    def init_period(k):
+        ks = jax.random.split(k, period)
+        return {
+            f"b{i}": init_layer_params(ks[i], cfg, kind, cross=cross)
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+
+    p["stack"] = jax.vmap(init_period)(jax.random.split(keys[3], n_periods))
+    p["remainder"] = [
+        init_layer_params(jax.random.fold_in(keys[4], i), cfg, kind, cross=cross)
+        for i, kind in enumerate(rem)
+    ]
+    p["final_norm"] = jnp.ones((D,), jnp.float32)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(keys[5], (D, V))
+
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        enc_key = keys[6]
+        if e.frontend_dim != D:
+            p["enc_proj"] = dense_init(jax.random.fold_in(enc_key, 0), (e.frontend_dim, D))
+        p["enc_pos"] = embed_init(jax.random.fold_in(enc_key, 1), (e.num_frames, D))
+
+        def init_enc_layer(k):
+            return {"b0": init_layer_params(k, cfg, "attn")}
+
+        p["encoder"] = jax.vmap(init_enc_layer)(jax.random.split(enc_key, e.num_layers))
+        p["enc_norm"] = jnp.ones((D,), jnp.float32)
+
+    if cfg.vision is not None:
+        v = cfg.vision
+        k1, k2 = jax.random.split(keys[7])
+        p["projector"] = {
+            "w1": dense_init(k1, (v.vit_dim, D)),
+            "w2": dense_init(k2, (D, D)),
+        }
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16) -> Cache:
+    """Decode cache sized for ``seq`` total positions."""
+    cross_len = cfg.encoder.num_frames if cfg.encoder is not None else 0
+    prelude_dense = cfg.moe is not None and cfg.moe.first_layer_dense
+    n_scan = cfg.num_layers - (1 if prelude_dense else 0)
+    period = cfg.period
+    n_periods = n_scan // period
+    rem = cfg.block_pattern[: n_scan % period]
+
+    def one_period(_):
+        return {
+            f"b{i}": init_layer_cache(cfg, kind, batch, seq, dtype, cross_len)
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+
+    c: Cache = {
+        "stack": jax.vmap(one_period)(jnp.arange(n_periods)),
+        "remainder": [
+            init_layer_cache(cfg, kind, batch, seq, dtype, cross_len) for kind in rem
+        ],
+    }
+    if prelude_dense:
+        c["prelude"] = init_layer_cache(cfg, cfg.block_pattern[0], batch, seq, dtype, cross_len)
+    return c
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def _encoder_forward(p: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B, T, F)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = frames.astype(dt)
+    if "enc_proj" in p:
+        x = x @ p["enc_proj"].astype(dt)
+    x = x + p["enc_pos"].astype(dt)[None, : x.shape[1]]
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        # bidirectional self-attention: no cache, no causal mask -> use
+        # encoder_kv trick? encoder needs full (non-causal) self-attention.
+        h2 = rms_norm(h, lp["b0"]["ln1"], cfg.norm_eps)
+        q, k, v = attn._qkv(lp["b0"]["mix"], cfg, h2)
+        mask = jnp.ones((h.shape[1], h.shape[1]), bool)
+        o = attn._sdpa(q, k, v, mask, cfg.num_kv_heads)
+        o = o.reshape(h.shape[0], h.shape[1], -1) @ lp["b0"]["mix"]["wo"].astype(h.dtype)
+        h = h + o
+        h2 = rms_norm(h, lp["b0"]["ln2"], cfg.norm_eps)
+        h = h + apply_mlp(lp["b0"]["mlp"], h2, _mlp_kind(cfg))
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.unroll:
+        n = jax.tree.leaves(p["encoder"])[0].shape[0]
+        for i in range(n):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], p["encoder"]))
+    else:
+        x, _ = jax.lax.scan(body, x, p["encoder"])
+    del positions
+    return rms_norm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    *,
+    frames: Optional[jnp.ndarray] = None,
+    patches: Optional[jnp.ndarray] = None,
+    cache: Optional[Cache] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    """Full model forward.
+
+    tokens (B, S) int32. frames: (B, T, F) stub audio embeddings (enc-dec).
+    patches: (B, P, vit_dim) stub ViT embeddings (VLM; prepended).
+    cache/cache_pos: decode state (cache_pos = #tokens already consumed).
+    Returns (logits fp32 (B, S_out, V), new_cache, aux_loss).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    if dt != jnp.float32:
+        # One-shot mixed-precision cast of all >=2-D weights (norm scales
+        # stay fp32). Under FSDP this halves the (possibly loop-hoisted)
+        # weight all-gathers and every HBM weight stream — §Perf memory
+        # lever; the optimizer still holds fp32 masters.
+        params = jax.tree.map(
+            lambda a: a.astype(dt) if (a.dtype == jnp.float32 and a.ndim >= 2) else a,
+            params,
+        )
+    B, S = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+
+    if cfg.vision is not None and patches is not None:
+        pr = params["projector"]
+        pe = jax.nn.gelu(patches.astype(dt) @ pr["w1"].astype(dt)) @ pr["w2"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)  # image tokens first
+        S = x.shape[1]
+
+    pos0 = cache_pos if cache_pos is not None else 0
+    positions = pos0 + jnp.arange(S)
+    if cfg.pos_kind == "learned":
+        pe = jnp.take(params["pos_embed"], jnp.minimum(positions, cfg.max_position - 1), axis=0)
+        x = x + pe.astype(dt)[None]
+
+    encoder_out = None
+    if cfg.encoder is not None and frames is not None:
+        encoder_out = _encoder_forward(params, cfg, frames)
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if "prelude" in params:
+        pc = cache.get("prelude") if cache is not None else None
+        x, new_pc, aux = layer_forward(
+            params["prelude"], cfg, cfg.block_pattern[0], x, positions,
+            cache=pc, cache_pos=cache_pos, encoder_out=encoder_out,
+        )
+        aux_total += aux
+
+    def period_body(carry, xs):
+        h, aux_acc = carry
+        p_per, c_per = xs
+        new_c_per = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            ci = c_per.get(f"b{i}") if isinstance(c_per, dict) and c_per else None
+            h, nci, aux = layer_forward(
+                p_per[f"b{i}"], cfg, kind, h, positions,
+                cache=ci, cache_pos=cache_pos, encoder_out=encoder_out,
+            )
+            new_c_per[f"b{i}"] = nci if nci is not None else {}
+        return (h, aux_acc + aux), new_c_per
+
+    body = jax.checkpoint(period_body) if cfg.remat else period_body
+    stack_cache = cache["stack"] if cache is not None else {}
+    if cfg.unroll:
+        n_per = jax.tree.leaves(params["stack"])[0].shape[0]
+        collected = []
+        carry = (x, aux_total)
+        for pi in range(n_per):
+            p_per = jax.tree.map(lambda a: a[pi], params["stack"])
+            c_per = jax.tree.map(lambda a: a[pi], stack_cache) if cache is not None else {}
+            carry, nc = body(carry, (p_per, c_per))
+            collected.append(nc)
+        (x, aux_total) = carry
+        new_stack_cache = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *collected) if collected and cache is not None else {}
+        )
+    else:
+        (x, aux_total), new_stack_cache = jax.lax.scan(
+            body, (x, aux_total), (params["stack"], stack_cache)
+        )
+
+    new_cache: Optional[Cache] = None
+    if cache is not None:
+        new_cache = {"stack": new_stack_cache, "remainder": []}
+        if "prelude" in params:
+            new_cache["prelude"] = new_pc
+
+    for i, lp in enumerate(params["remainder"]):
+        kind = cfg.block_pattern[i]
+        ci = cache["remainder"][i] if cache is not None else None
+        x, nci, aux = layer_forward(
+            lp, cfg, kind, x, positions, cache=ci, cache_pos=cache_pos, encoder_out=encoder_out
+        )
+        aux_total += aux
+        if cache is not None:
+            new_cache["remainder"].append(nci)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # mask pad slots instead of slicing: a slice to a non-256-multiple
+        # width would force the (B, S, V) buffer back to unsharded
+        pad_mask = jnp.arange(cfg.padded_vocab_size) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    return logits, new_cache, aux_total

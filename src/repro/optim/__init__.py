@@ -1,0 +1,21 @@
+from repro.optim.adam import (
+    AdamState,
+    adam_init,
+    adam_update,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+)
+from repro.optim.schedule import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "AdamState",
+    "adam_init",
+    "adam_update",
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

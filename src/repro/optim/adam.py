@@ -1,0 +1,93 @@
+"""Adam / AdamW on arbitrary pytrees (no optax dependency).
+
+The paper optimizes the variational parameters phi_j with Adam (Kingma & Ba
+2014); the LM substrate uses AdamW. State is a pytree-of-pytrees so it vmaps
+over the PSVGP partition axis and shards over the mesh exactly like params.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray  # () int32
+    mu: PyTree  # first moment
+    nu: PyTree  # second moment
+
+
+def adam_init(params: PyTree) -> AdamState:
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.zeros_like, params))
+
+
+def _moments(grads: PyTree, state: AdamState, b1: float, b2: float):
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * (g * g), state.nu, grads)
+    return mu, nu
+
+
+def adam_update(
+    params: PyTree,
+    grads: PyTree,
+    state: AdamState,
+    lr: float | jnp.ndarray = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+) -> Tuple[PyTree, AdamState]:
+    """One Adam step minimizing the loss whose gradient is ``grads``."""
+    step = state.step + 1
+    mu, nu = _moments(grads, state, b1, b2)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: AdamState,
+    lr: float | jnp.ndarray = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[PyTree, AdamState]:
+    """AdamW (decoupled weight decay) for the LM substrate."""
+    step = state.step + 1
+    mu, nu = _moments(grads, state, b1, b2)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads)

@@ -1,0 +1,131 @@
+"""Jittable train / prefill / decode steps for the LM substrate.
+
+These are the functions the launcher lowers on the production mesh:
+  train_step   — fwd + CE loss (+ MoE aux) + AdamW       (train_4k)
+  prefill_step — fwd over the prompt, builds the cache    (prefill_32k)
+  decode_step  — ONE token against the cache              (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import AdamState, adam_init, adamw_update, clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamState
+    step: jnp.ndarray
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> TrainState:
+    params = transformer.init_model_params(key, cfg)
+    return TrainState(params=params, opt=adam_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token CE in fp32. logits (B, S, V), targets (B, S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def _loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+    logits, _, aux = transformer.forward(
+        params,
+        cfg,
+        batch["tokens"],
+        frames=batch.get("frames"),
+        patches=batch.get("patches"),
+    )
+    targets = batch["targets"]
+    if logits.shape[1] != targets.shape[1]:
+        # VLM: image positions prepended — loss on the text region only
+        logits = logits[:, -targets.shape[1] :]
+    ce = cross_entropy(logits, targets)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return ce + aux_w * aux, (ce, aux)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    learning_rate: float = 3e-4,
+    clip_norm: float = 1.0,
+    microbatches: int = 1,
+):
+    """Build the jittable train step (the launcher adds shardings).
+
+    microbatches > 1 runs gradient accumulation: the global batch is split
+    into M chunks scanned sequentially, activation memory scales ~1/M while
+    the optimizer sees the same averaged gradient (§Perf memory lever —
+    the grad accumulator is params-shaped, so with FSDP it stays sharded).
+    """
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        if microbatches == 1:
+            (loss, (ce, aux)), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
+                state.params, cfg, batch
+            )
+        else:
+            mb = {
+                k: v.reshape((microbatches, v.shape[0] // microbatches) + v.shape[1:])
+                for k, v in batch.items()
+            }
+
+            def body(acc, chunk):
+                g_acc, l_acc, ce_acc, aux_acc = acc
+                (l, (ce_i, aux_i)), g = jax.value_and_grad(_loss_fn, has_aux=True)(
+                    state.params, cfg, chunk
+                )
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, ce_acc + ce_i, aux_acc + aux_i), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                body, (zeros, 0.0, 0.0, 0.0), mb
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss, ce, aux = loss * inv, ce * inv, aux * inv
+        grads = clip_by_global_norm(grads, clip_norm)
+        params, opt = adamw_update(state.params, grads, state.opt, lr=learning_rate)
+        metrics = {"loss": loss, "ce": ce, "aux": aux}
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, cache_len: int):
+    """Prompt -> (last-token logits, filled cache)."""
+    serve_cfg = dataclasses.replace(cfg, remat=False)
+
+    def prefill_step(params, tokens, frames=None, patches=None):
+        B = tokens.shape[0]
+        cache = transformer.init_cache(serve_cfg, B, cache_len, jnp.dtype(serve_cfg.dtype))
+        logits, cache, _ = transformer.forward(
+            params, serve_cfg, tokens, frames=frames, patches=patches,
+            cache=cache, cache_pos=jnp.zeros((), jnp.int32),
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(cache, pos, token) -> (logits, new cache). ONE new token."""
+    serve_cfg = dataclasses.replace(cfg, remat=False)
+
+    def decode_step(params, cache, cache_pos, tokens):
+        logits, cache, _ = transformer.forward(
+            params, serve_cfg, tokens, cache=cache, cache_pos=cache_pos
+        )
+        return logits[:, -1], cache
+
+    return decode_step

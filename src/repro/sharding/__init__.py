@@ -1,0 +1,9 @@
+from repro.sharding.rules import (
+    batch_pspec,
+    cache_pspecs,
+    data_axes,
+    params_pspecs,
+    state_pspecs,
+)
+
+__all__ = ["params_pspecs", "state_pspecs", "batch_pspec", "cache_pspecs", "data_axes"]

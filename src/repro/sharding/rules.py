@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules with divisibility fallback (MaxText-style).
+
+Strategy on the production mesh (pod, data, model):
+  * batch dims            -> (pod, data) combined
+  * tensor-parallel dims  -> model (FFN hidden, head products, vocab,
+                             MoE expert axis, recurrent width)
+  * any dim not divisible by its mesh-axis size falls back to REPLICATED
+    for that axis — this is what lets qwen2's 14 heads or whisper's 8 heads
+    lower cleanly on a 16-wide model axis while its FFN/vocab still shard
+    (recorded per-arch in EXPERIMENTS.md §Dry-run).
+
+Rules are keyed on parameter-tree path names, so they cover every block
+kind in repro.models without per-arch tables. Stacked leaves (period scan)
+carry a leading period axis which is never sharded.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.optim import AdamState
+
+# name -> per-dim logical axes, innermost dims rightmost. "model" marks the
+# tensor-parallel dim; None replicates. Entries match the TRAILING dims of
+# the leaf (leading stack/period axes are implicitly None).
+_RULES = {
+    # embeddings / head
+    "embed": ("model", None),  # vocab-parallel
+    "pos_embed": (None, None),
+    "enc_pos": (None, None),
+    "lm_head": (None, "model"),
+    # attention projections
+    "wq": (None, "model"),
+    "wk": (None, "model"),
+    "wv": (None, "model"),
+    "wo": ("model", None),
+    "bq": ("model",),
+    "bk": ("model",),
+    "bv": ("model",),
+    # MLA
+    "w_dq": (None, None),
+    "w_uq": (None, "model"),
+    "w_dkv": (None, None),
+    "w_kr": (None, None),
+    "w_uk": (None, "model"),
+    "w_uv": (None, "model"),
+    # MLP (2D) — MoE expert weights (3D) handled by ndim dispatch below
+    "w_gate": (None, "model"),
+    "w_up": (None, "model"),
+    "w_down": ("model", None),
+    "b_up": ("model",),
+    "b_down": (None,),
+    "router": (None, None),
+    # recurrent blocks
+    "w_a": (None, "model"),
+    "w_b": (None, "model"),
+    "conv": (None, "model"),
+    "w_r": ("model", None),
+    "w_i": ("model", None),
+    "w_out": ("model", None),
+    "w_if": ("model", None),
+    "w_in": (None, None),
+    "r": (None, None),
+    "b": (None,),
+    "b_if": (None,),
+    "out_norm": ("model",),
+    # projector (VLM)
+    "w1": (None, None),
+    "w2": (None, None),
+}
+
+_MOE_RULES = {  # 3D expert-stacked weights: expert-parallel on model axis
+    "w_gate": ("model", None, None),
+    "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for batch sharding (everything except 'model')."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def _axis_ok(dim: int, axis: Optional[str], mesh: Mesh) -> Optional[str]:
+    if axis is None:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+    return axis if dim % size == 0 else None
+
+
+def _spec_for(path_names: Sequence[str], leaf, mesh: Mesh, fsdp: bool = False) -> P:
+    name = path_names[-1] if path_names else ""
+    in_moe = "moe" in path_names
+    rule = None
+    if in_moe and leaf.ndim >= 3 and name in _MOE_RULES:
+        rule = _MOE_RULES[name]
+    elif name in _RULES:
+        rule = _RULES[name]
+    if rule is None:
+        return P()  # norms, scalars, anything unnamed: replicate
+    nlead = leaf.ndim - len(rule)
+    if nlead < 0:
+        return P()
+    dims = leaf.shape[nlead:]
+    axes = list(_axis_ok(d, a, mesh) for d, a in zip(dims, rule))
+    if fsdp:
+        # ZeRO-3 style: additionally shard the first replicated dim of every
+        # weight over the (pod, data) axes. XLA inserts the weight
+        # all-gather before use and the reduce-scatter on the grad — the
+        # classic memory <-> collective trade (EXPERIMENTS.md §Perf).
+        daxes = data_axes(mesh)
+        for i, (d, a) in enumerate(zip(dims, axes)):
+            if a is None and _axis_ok(d, daxes, mesh) is not None:
+                axes[i] = daxes
+                break
+    return P(*((None,) * nlead + tuple(axes)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+        elif isinstance(e, jax.tree_util.SequenceKey):
+            names.append(str(e.idx))
+    return tuple(names)
+
+
+def params_pspecs(params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_names(path), leaf, mesh, fsdp), params
+    )
+
+
+def state_pspecs(state, mesh: Mesh, fsdp: bool = False):
+    """Specs for a TrainState/PSVGPState-like (params, AdamState, step).
+    With fsdp=True the optimizer moments shard with the params (ZeRO)."""
+    pspec = params_pspecs(state.params, mesh, fsdp)
+    return type(state)(
+        params=pspec,
+        opt=AdamState(step=P(), mu=pspec, nu=pspec),
+        step=P(),
+    )
+
+
+def batch_pspec(mesh: Mesh, batch_shardable: bool = True) -> P:
+    """Spec for (B, S) token arrays: batch over (pod, data)."""
+    return P(data_axes(mesh)) if batch_shardable else P()
+
+
+def cache_pspecs(cache: Any, mesh: Mesh, *, shard_seq: bool) -> Any:
+    """Decode-cache specs.
+
+    Default (decode_32k): batch dim over (pod,data), heads/width over model.
+    shard_seq (long_500k, batch=1): the SEQUENCE dim of attention caches is
+    sharded over (pod,data) instead — sequence-parallel KV.
+    """
+    daxes = data_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nlead = 1 if "stack" in names else 0  # stacked period axis
+        nd = leaf.ndim - nlead
+        if name in ("k", "v", "cross_k", "cross_v"):  # (B, S, KV, hd)
+            kv = leaf.shape[nlead + 2]
+            head_ax = "model" if kv % mesh.shape["model"] == 0 else None
+            if shard_seq:
+                s = leaf.shape[nlead + 1]
+                seq_ok = s % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+                return P(*((None,) * nlead), None, daxes if seq_ok else None, head_ax, None)
+            b = leaf.shape[nlead]
+            b_ok = b % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+            return P(*((None,) * nlead), daxes if b_ok else None, None, head_ax, None)
+        if name in ("c_kv", "k_rope"):  # (B, S, r) MLA latents
+            if shard_seq:
+                s = leaf.shape[nlead + 1]
+                seq_ok = s % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+                return P(*((None,) * nlead), None, daxes if seq_ok else None, None)
+            b = leaf.shape[nlead]
+            b_ok = b % int(np.prod([mesh.shape[a] for a in daxes])) == 0
+            return P(*((None,) * nlead), daxes if b_ok else None, None, None)
+        if name in ("conv", "h", "state", "norm", "c", "n", "m"):
+            # recurrent states: last dim is width/heads -> model if divisible
+            last = leaf.shape[-1]
+            ax = "model" if last % mesh.shape["model"] == 0 else None
+            return P(*((None,) * (leaf.ndim - 1)), ax)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate the
+REDUCED same-family variant, run one forward + one train step on CPU,
+assert output shapes and no NaNs. The FULL configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation) — see launch/dryrun.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get, get_smoke, swa_variant
+from repro.models import transformer
+from repro.runtime.steps import init_train_state, make_decode_step, make_prefill_step, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 24
+
+# exact assigned full-config numbers (guards against config drift)
+EXPECTED_FULL = {
+    "deepseek_moe_16b": dict(num_layers=28, d_model=2048, num_heads=16, num_kv_heads=16, d_ff=1408, vocab_size=102400),
+    "internvl2_76b": dict(num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8, d_ff=28672, vocab_size=128256),
+    "qwen2_0_5b": dict(num_layers=24, d_model=896, num_heads=14, num_kv_heads=2, d_ff=4864, vocab_size=151936),
+    "minicpm3_4b": dict(num_layers=62, d_model=2560, num_heads=40, d_ff=6400, vocab_size=73448),
+    "qwen3_0_6b": dict(num_layers=28, d_model=1024, num_heads=16, num_kv_heads=8, d_ff=3072, vocab_size=151936),
+    "whisper_base": dict(num_layers=6, d_model=512, num_heads=8, num_kv_heads=8, d_ff=2048, vocab_size=51865),
+    "xlstm_350m": dict(num_layers=24, d_model=1024, num_heads=4, d_ff=0, vocab_size=50304),
+    "recurrentgemma_2b": dict(num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1, d_ff=7680, vocab_size=256000),
+    "qwen3_moe_30b_a3b": dict(num_layers=48, d_model=2048, num_heads=32, num_kv_heads=4, d_ff=768, vocab_size=151936),
+    "h2o_danube_3_4b": dict(num_layers=24, d_model=3840, num_heads=32, num_kv_heads=8, d_ff=10240, vocab_size=32000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get(arch)
+    for k, v in EXPECTED_FULL[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def _batch(cfg):
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1)}
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        batch["frames"] = jax.random.normal(KEY, (B, e.num_frames, e.frontend_dim))
+    if cfg.vision is not None:
+        v = cfg.vision
+        batch["patches"] = jax.random.normal(KEY, (B, v.num_patches, v.vit_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    assert cfg.num_layers <= 4 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    state = init_train_state(KEY, cfg)
+    batch = _batch(cfg)
+    logits, _, _ = transformer.forward(
+        state.params, cfg, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+    )
+    S_out = S + (cfg.vision.num_patches if cfg.vision is not None else 0)
+    assert logits.shape == (B, S_out, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), "NaN in forward logits"
+    state2, m = jax.jit(make_train_step(cfg, learning_rate=1e-3))(state, batch)
+    assert np.isfinite(float(m["loss"])), "NaN train loss"
+    # params actually changed
+    d = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params))
+    )
+    assert d > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_serve_step(arch):
+    """Prefill + one decode step for every architecture (the decode_32k /
+    long_500k path). Enc-dec prefills with frames; VLM with patches."""
+    cfg = get_smoke(arch)
+    state = init_train_state(KEY, cfg)
+    batch = _batch(cfg)
+    pf = jax.jit(make_prefill_step(cfg, cache_len=S + 8))
+    lg_p, cache = pf(
+        state.params, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+    )
+    assert np.isfinite(np.asarray(lg_p)).all()
+    dec = jax.jit(make_decode_step(cfg))
+    pos = S + (cfg.vision.num_patches if cfg.vision is not None else 0)
+    lg, cache2 = dec(state.params, cache, jnp.asarray(pos, jnp.int32), batch["tokens"][:, :1])
+    assert lg.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg)).all(), "NaN decode logits"
+
+
+def test_swa_variant_only_rewrites_quadratic_attention():
+    assert swa_variant(get("qwen2-0.5b")).block_pattern == ("local_attn",)
+    assert swa_variant(get("qwen2-0.5b")).sliding_window == 4096
+    # sub-quadratic archs unchanged
+    assert swa_variant(get("xlstm-350m")) is get("xlstm-350m")
+    assert swa_variant(get("recurrentgemma-2b")) is get("recurrentgemma-2b")
+    assert swa_variant(get("h2o-danube-3-4b")) is get("h2o-danube-3-4b")
+    # MLA keeps its native compressed cache
+    assert swa_variant(get("minicpm3-4b")) is get("minicpm3-4b")
+
+
+def test_registry_roundtrip():
+    for arch in ARCH_IDS:
+        assert get(arch).name.replace("-", "_").replace(".", "_") == arch

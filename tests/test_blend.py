@@ -1,0 +1,78 @@
+"""Blended (stitched) prediction — beyond-paper §6 follow-up."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import psvgp, svgp
+from repro.core.blend import predict_blended
+from repro.core.metrics import rmspe
+from repro.core.partition import make_grid, partition_data
+from repro.data.spatial import e3sm_like_field
+
+
+def _fit(n=4000, gx=5, iters=800, delta=0.0):
+    ds = e3sm_like_field(n=n, seed=0)
+    grid = make_grid(ds.x, gx, gx)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=6, input_dim=2),
+        delta=delta, batch_size=16, learning_rate=0.05,
+    )
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+    state = psvgp.fit(static, state, data, iters)
+    return ds, grid, data, static, state
+
+
+def test_blended_prediction_continuous_across_boundary():
+    """Evaluating the stitched surface epsilon on either side of a
+    partition boundary gives (near-)identical values — the discontinuity
+    ISVGP suffers from vanishes at stitch time."""
+    ds, grid, data, static, state = _fit()
+    xb = float(grid.x_edges[2])  # interior vertical boundary
+    ys = np.linspace(grid.y_edges[1], grid.y_edges[3], 7).astype(np.float32)
+    eps = 1e-4
+    left = np.stack([np.full_like(ys, xb - eps), ys], -1)
+    right = np.stack([np.full_like(ys, xb + eps), ys], -1)
+    ml, _ = predict_blended(static, state, grid, jnp.asarray(left))
+    mr, _ = predict_blended(static, state, grid, jnp.asarray(right))
+    np.testing.assert_allclose(np.asarray(ml), np.asarray(mr), atol=2e-3)
+
+    # whereas the two LOCAL models disagree by much more at the same spot
+    from repro.core.psvgp import predict_at_partitions
+
+    pl = grid.index_of(1, 2)
+    pr = grid.index_of(2, 2)
+    mid = jnp.asarray(np.stack([np.full_like(ys, xb), ys], -1))[None]
+    m_l, _ = predict_at_partitions(static, state, jnp.asarray([pl]), mid)
+    m_r, _ = predict_at_partitions(static, state, jnp.asarray([pr]), mid)
+    local_gap = float(jnp.max(jnp.abs(m_l - m_r)))
+    blended_gap = float(jnp.max(jnp.abs(ml - mr)))
+    assert blended_gap < 0.05 * local_gap + 1e-4, (blended_gap, local_gap)
+
+
+def test_blended_prediction_accuracy_not_worse():
+    """Stitching must not cost accuracy: blended RMSPE within 10% of the
+    per-partition RMSPE (it usually improves, acting as model averaging)."""
+    ds, grid, data, static, state = _fit()
+    base = float(rmspe(static, state, data))
+    mean, var = predict_blended(static, state, grid, jnp.asarray(ds.x))
+    blended = float(jnp.sqrt(jnp.mean((mean - jnp.asarray(ds.y)) ** 2)))
+    assert blended < 1.1 * base, (blended, base)
+    assert np.isfinite(np.asarray(var)).all() and (np.asarray(var) > 0).all()
+
+
+def test_blended_matches_local_at_cell_centers():
+    """At a partition's center the bilinear weights collapse onto that
+    partition's own model."""
+    ds, grid, data, static, state = _fit(iters=200)
+    from repro.core.partition import partition_centers
+    from repro.core.psvgp import predict_at_partitions
+
+    centers = partition_centers(grid)[[6, 12]]
+    ids = jnp.asarray([6, 12])
+    m_blend, _ = predict_blended(static, state, grid, jnp.asarray(centers))
+    m_local, _ = predict_at_partitions(static, state, ids, jnp.asarray(centers)[:, None])
+    np.testing.assert_allclose(
+        np.asarray(m_blend), np.asarray(m_local)[:, 0], atol=1e-4
+    )

@@ -1,0 +1,154 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+Kernels run in interpret mode on CPU (same body, Python evaluation) — this
+is the validation the container supports; Mosaic compilation happens on a
+real TPU backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import svgp
+from repro.gp import make_covariance
+from repro.kernels import ops, ref
+
+
+def _inputs(key, B, m, d, dtype=jnp.float32):
+    kx, kz, kl, kv = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (B, d), dtype)
+    z = jax.random.normal(kz, (m, d), dtype)
+    lls = (0.4 * jax.random.normal(kl, (d,))).astype(dtype)
+    lv = (0.2 * jax.random.normal(kv, ())).astype(dtype)
+    return x, z, lls, lv
+
+
+# ---- shape sweep: unaligned and aligned, tiny paper-scale and MXU-scale ----
+SHAPES = [
+    (8, 5, 2),     # paper's m=5 E3SM setting
+    (32, 10, 2),   # paper's m=10
+    (100, 20, 3),  # paper's m=20, odd batch, 3-d inputs
+    (128, 128, 2), # exactly one MXU tile
+    (200, 130, 4), # crosses both tile boundaries
+    (7, 1, 2),     # degenerate single inducing point
+]
+
+
+@pytest.mark.parametrize("B,m,d", SHAPES)
+def test_rbf_kernel_matches_oracle(B, m, d):
+    x, z, lls, lv = _inputs(jax.random.PRNGKey(B * m + d), B, m, d)
+    got = ops.rbf_cross_cov(x, z, lls, lv)
+    want = ref.rbf_cross_cov(x, z, lls, lv)
+    assert got.shape == (B, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,m,d", SHAPES)
+def test_svgp_projection_matches_oracle(B, m, d):
+    x, z, lls, lv = _inputs(jax.random.PRNGKey(1000 + B * m + d), B, m, d)
+    kmm = ref.rbf_cross_cov(z, z, lls, lv) + 1e-4 * jnp.eye(m)
+    lmm = jnp.linalg.cholesky(kmm)
+    got = ops.svgp_projection(x, z, lls, lv, lmm)
+    want = ops.svgp_projection_ref(x, z, lls, lv, lmm)
+    for g, w, name in zip(got, want, ("knm", "lk_t", "q_diag")):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-4, err_msg=name
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rbf_kernel_dtypes(dtype):
+    x, z, lls, lv = _inputs(jax.random.PRNGKey(3), 64, 24, 2, dtype=dtype)
+    got = ops.rbf_cross_cov(x, z, lls.astype(jnp.float32), lv.astype(jnp.float32))
+    want = ref.rbf_cross_cov(
+        x.astype(jnp.float32), z.astype(jnp.float32),
+        lls.astype(jnp.float32), lv.astype(jnp.float32),
+    )
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol
+    )
+    assert got.dtype == dtype
+
+
+@given(
+    B=st.integers(1, 80),
+    m=st.integers(1, 40),
+    d=st.integers(1, 4),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=30, deadline=None)
+def test_rbf_kernel_property_sweep(B, m, d, seed):
+    """Hypothesis sweep over arbitrary (B, m, d): padding logic must never
+    corrupt true outputs."""
+    x, z, lls, lv = _inputs(jax.random.PRNGKey(seed), B, m, d)
+    got = ops.rbf_cross_cov(x, z, lls, lv)
+    want = ref.rbf_cross_cov(x, z, lls, lv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_rbf_kernel_invariances():
+    """K(X,X) has variance on the diagonal; K is symmetric for X=Z; values
+    bounded by the process variance (RBF properties, computed by kernel)."""
+    x, _, lls, lv = _inputs(jax.random.PRNGKey(9), 50, 50, 2)
+    k = np.asarray(ops.rbf_cross_cov(x, x, lls, lv))
+    var = float(jnp.exp(lv))
+    np.testing.assert_allclose(np.diag(k), var, rtol=1e-5)
+    np.testing.assert_allclose(k, k.T, rtol=1e-4, atol=1e-6)
+    assert (k <= var * (1 + 1e-5)).all() and (k > 0).all()
+
+
+def test_projection_gradients_match_ref():
+    """custom_vjp: d(ELBO)/d(params) through the kernel == through the ref."""
+    cov_fn = make_covariance("rbf")
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (40, 2))
+    y = jnp.sin(x[:, 0])
+    cfg = svgp.SVGPConfig(num_inducing=10, input_dim=2)
+    params = svgp.init_svgp_params(jax.random.PRNGKey(1), cfg, x_init=x)
+    g0 = jax.grad(lambda p: svgp.elbo(p, cov_fn, x, y, use_pallas=False))(params)
+    g1 = jax.grad(lambda p: svgp.elbo(p, cov_fn, x, y, use_pallas=True))(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        scale = np.maximum(np.abs(np.asarray(a)), 1.0)
+        np.testing.assert_allclose(
+            np.asarray(a) / scale, np.asarray(b) / scale, atol=5e-3
+        )
+
+
+def test_projection_q_diag_nonnegative_and_bounded():
+    """q_diag = k^T Kmm^{-1} k in [0, k_ii]: the Nystrom residual k~_ii >= 0
+    (what makes eq. 3's trace term a valid variance)."""
+    x, z, lls, lv = _inputs(jax.random.PRNGKey(11), 64, 16, 2)
+    kmm = ref.rbf_cross_cov(z, z, lls, lv) + 1e-5 * jnp.eye(16)
+    lmm = jnp.linalg.cholesky(kmm)
+    _, _, qd = ops.svgp_projection(x, z, lls, lv, lmm)
+    qd = np.asarray(qd)
+    kd = float(jnp.exp(lv))
+    assert (qd >= -1e-5).all()
+    assert (qd <= kd * (1 + 1e-3)).all()
+
+
+def test_pallas_elbo_used_by_trainer():
+    """End-to-end: PSVGP trainer with use_pallas=True trains w/o NaNs and
+    reaches a loss close to the jnp path's."""
+    from repro.core import psvgp
+    from repro.core.metrics import rmspe
+    from repro.core.partition import make_grid, partition_data
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=1200, seed=3)
+    grid = make_grid(ds.x, 4, 4)
+    data = partition_data(ds.x, ds.y, grid)
+    out = {}
+    for use_pallas in (False, True):
+        cfg = psvgp.PSVGPConfig(
+            svgp=svgp.SVGPConfig(num_inducing=8, input_dim=2, use_pallas=use_pallas),
+            delta=0.2, batch_size=16, learning_rate=0.05,
+        )
+        static = psvgp.build(cfg, data)
+        state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+        state = psvgp.fit(static, state, data, 150)
+        out[use_pallas] = float(rmspe(static, state, data))
+    assert np.isfinite(out[True])
+    assert abs(out[True] - out[False]) < 0.05 * out[False] + 0.02, out

@@ -1,0 +1,225 @@
+"""LM substrate tests: every block kind, train + serve, cache consistency.
+
+Cache-vs-full-forward equality is THE correctness property for serving: a
+decode step at position S against a prefilled cache must reproduce the
+logits of an uncached forward over the S+1 tokens.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer
+from repro.models.config import (
+    EncoderConfig,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    VisionStubConfig,
+)
+from repro.runtime.steps import (
+    cross_entropy,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _dense(**kw):
+    base = dict(
+        name="t-dense", arch_type="dense", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32",
+    )
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+CONFIGS = {
+    "dense-gqa": _dense(qk_norm=True, qkv_bias=True),
+    "dense-swa": _dense(name="t-swa", sliding_window=16, block_pattern=("local_attn",)),
+    "mla": _dense(
+        name="t-mla", block_pattern=("mla",),
+        mla=MLAConfig(q_lora_rank=64, kv_lora_rank=32, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+    ),
+    "moe": ModelConfig(
+        name="t-moe", arch_type="moe", num_layers=3, d_model=128, num_heads=4,
+        num_kv_heads=4, d_ff=256, vocab_size=512, dtype="float32",
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=64, num_shared=1,
+                      first_layer_dense=True, dense_d_ff=256, capacity_factor=4.0),
+    ).validate(),
+    "xlstm": ModelConfig(
+        name="t-xlstm", arch_type="ssm", num_layers=4, d_model=128, num_heads=4,
+        num_kv_heads=4, d_ff=0, vocab_size=512, dtype="float32", mlp_kind="none",
+        rnn_width=256, block_pattern=("mlstm", "mlstm", "mlstm", "slstm"), pos_kind="none",
+    ).validate(),
+    "hybrid": ModelConfig(
+        name="t-rg", arch_type="hybrid", num_layers=3, d_model=128, num_heads=4,
+        num_kv_heads=1, d_ff=256, vocab_size=512, dtype="float32", sliding_window=16,
+        block_pattern=("rglru", "rglru", "local_attn"),
+    ).validate(),
+}
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(KEY, (B, S), 0, 256)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_train_step_finite_and_decreases(name, toks):
+    cfg = CONFIGS[name]
+    state = init_train_state(KEY, cfg)
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, axis=1)}
+    ts = jax.jit(make_train_step(cfg, learning_rate=1e-3))
+    losses = []
+    for _ in range(8):
+        state, m = ts(state, batch)
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(l) for l in losses)
+    assert losses[-1] < losses[0]  # overfits one batch
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_decode_matches_full_forward(name, toks):
+    """Prefill(S) + decode(1) == uncached forward over S+1 tokens."""
+    cfg = CONFIGS[name]
+    state = init_train_state(KEY, cfg)
+    pf = jax.jit(make_prefill_step(cfg, cache_len=S + 8))
+    _, cache = pf(state.params, toks)
+    dec = jax.jit(make_decode_step(cfg))
+    nxt = toks[:, :1]
+    lg, _ = dec(state.params, cache, jnp.asarray(S, jnp.int32), nxt)
+    full, _, _ = transformer.forward(state.params, cfg, jnp.concatenate([toks, nxt], 1))
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, -1]), atol=2e-4)
+
+
+def test_multi_token_decode_chain(toks):
+    """8 sequential decode steps == uncached forward (dense cfg)."""
+    cfg = CONFIGS["dense-gqa"]
+    state = init_train_state(KEY, cfg)
+    pf = jax.jit(make_prefill_step(cfg, cache_len=S + 16))
+    _, cache = pf(state.params, toks)
+    dec = jax.jit(make_decode_step(cfg))
+    cont = jax.random.randint(jax.random.PRNGKey(5), (B, 8), 0, 256)
+    outs = []
+    for i in range(8):
+        lg, cache = dec(state.params, cache, jnp.asarray(S + i, jnp.int32), cont[:, i : i + 1])
+        outs.append(lg)
+    full, _, _ = transformer.forward(state.params, cfg, jnp.concatenate([toks, cont], 1))
+    got = np.stack([np.asarray(o) for o in outs], axis=1)  # (B, 8, V)
+    np.testing.assert_allclose(got, np.asarray(full[:, S:]), atol=2e-4)
+
+
+def test_sliding_window_ring_cache_long_decode():
+    """Decode far beyond the window: ring cache (window slots) must agree
+    with an uncached forward — the property long_500k relies on."""
+    cfg = _dense(name="t-swa2", num_layers=2, sliding_window=8, block_pattern=("local_attn",))
+    state = init_train_state(KEY, cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 12), 0, 256)  # > window
+    pf = jax.jit(make_prefill_step(cfg, cache_len=64))
+    _, cache = pf(state.params, prompt)
+    assert cache["stack"]["b0"]["k"].shape[2] == cfg.sliding_window  # (P, B, W, KV, hd)
+    dec = jax.jit(make_decode_step(cfg))
+    cont = jax.random.randint(jax.random.PRNGKey(3), (1, 10), 0, 256)
+    outs = []
+    for i in range(10):
+        lg, cache = dec(state.params, cache, jnp.asarray(12 + i, jnp.int32), cont[:, i : i + 1])
+        outs.append(np.asarray(lg))
+    full, _, _ = transformer.forward(state.params, cfg, jnp.concatenate([prompt, cont], 1))
+    np.testing.assert_allclose(
+        np.stack(outs, 1), np.asarray(full[:, 12:]), atol=3e-4
+    )
+
+
+def test_whisper_style_encdec(toks):
+    cfg = ModelConfig(
+        name="t-encdec", arch_type="audio", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, d_ff=256, vocab_size=512, dtype="float32", mlp_kind="gelu",
+        pos_kind="learned", max_position=128,
+        encoder=EncoderConfig(num_layers=2, num_frames=20, frontend_dim=64),
+    ).validate()
+    state = init_train_state(KEY, cfg)
+    frames = jax.random.normal(KEY, (B, 20, 64))
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1), "frames": frames}
+    ts = jax.jit(make_train_step(cfg, learning_rate=1e-3))
+    state, m = ts(state, batch)
+    assert np.isfinite(float(m["loss"]))
+    # serve: prefill consumes the prompt + frames, decode runs without frames
+    pf = jax.jit(make_prefill_step(cfg, cache_len=S + 8))
+    _, cache = pf(state.params, toks, frames=frames)
+    dec = jax.jit(make_decode_step(cfg))
+    lg, _ = dec(state.params, cache, jnp.asarray(S, jnp.int32), toks[:, :1])
+    assert np.isfinite(np.asarray(lg)).all()
+
+
+def test_vlm_patches_prepended(toks):
+    cfg = ModelConfig(
+        name="t-vlm", arch_type="vlm", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, d_ff=256, vocab_size=512, dtype="float32",
+        vision=VisionStubConfig(num_patches=8, vit_dim=96),
+    ).validate()
+    state = init_train_state(KEY, cfg)
+    patches = jax.random.normal(KEY, (B, 8, 96))
+    logits, _, _ = transformer.forward(state.params, cfg, toks, patches=patches)
+    assert logits.shape == (B, 8 + S, cfg.vocab_size)  # image tokens prepended
+    batch = {"tokens": toks, "targets": jnp.roll(toks, -1, 1), "patches": patches}
+    ts = jax.jit(make_train_step(cfg, learning_rate=1e-3))
+    state, m = ts(state, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_remainder_layers_used():
+    """num_layers not divisible by the pattern period: remainder layers
+    must exist and contribute (26-layer RecurrentGemma case)."""
+    cfg = ModelConfig(
+        name="t-rem", arch_type="hybrid", num_layers=5, d_model=64, num_heads=2,
+        num_kv_heads=1, d_ff=128, vocab_size=128, dtype="float32", sliding_window=8,
+        block_pattern=("rglru", "rglru", "local_attn"),
+    ).validate()
+    params = transformer.init_model_params(KEY, cfg)
+    assert len(params["remainder"]) == 2
+    t = jax.random.randint(KEY, (1, 16), 0, 128)
+    lg, _, _ = transformer.forward(params, cfg, t)
+    assert np.isfinite(np.asarray(lg)).all()
+    # zeroing a remainder layer's output-proj changes logits => it is used
+    params2 = jax.tree.map(lambda a: a, params)
+    params2["remainder"][0]["mix"]["w_out"] = jnp.zeros_like(
+        params2["remainder"][0]["mix"]["w_out"]
+    )
+    lg2, _, _ = transformer.forward(params2, cfg, t)
+    assert float(jnp.max(jnp.abs(lg - lg2))) > 1e-6
+
+
+def test_cross_entropy_uniform():
+    V = 64
+    logits = jnp.zeros((2, 3, V))
+    tgt = jnp.zeros((2, 3), jnp.int32)
+    np.testing.assert_allclose(float(cross_entropy(logits, tgt)), np.log(V), rtol=1e-5)
+
+
+def test_moe_capacity_drops_and_aux():
+    """Tight capacity drops tokens (output changes) but keeps finiteness;
+    aux loss is ~1 for a balanced router at init."""
+    from repro.models.moe import moe_forward, init_moe_params
+
+    cfg = CONFIGS["moe"]
+    p = init_moe_params(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    # dispatch_groups=1: tiny per-group token counts never exceed capacity,
+    # so drop behaviour is exercised with a single global group here
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=1))
+    out_hi, aux = moe_forward(p, cfg, x)
+    cfg_lo = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25, dispatch_groups=1)
+    )
+    out_lo, _ = moe_forward(p, cfg_lo, x)
+    assert np.isfinite(np.asarray(out_lo)).all()
+    assert float(jnp.max(jnp.abs(out_hi - out_lo))) > 1e-6
+    assert 0.5 < float(aux) < 2.0

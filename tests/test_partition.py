@@ -1,0 +1,107 @@
+"""Partitioner + neighborhood topology invariants (unit + property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import make_grid, partition_data, partition_centers
+from repro.core.neighbors import boundary_probes, direction_permutations, neighbor_table
+from repro.data.spatial import e3sm_like_field
+
+
+def test_partition_counts_conserved():
+    ds = e3sm_like_field(n=5000, seed=1)
+    grid = make_grid(ds.x, 10, 10)
+    data = partition_data(ds.x, ds.y, grid)
+    assert int(np.sum(np.asarray(data.counts))) == 5000
+    assert np.allclose(np.asarray(data.mask).sum(), 5000)
+
+
+def test_partition_points_in_cell():
+    ds = e3sm_like_field(n=2000, seed=2)
+    grid = make_grid(ds.x, 5, 4)
+    data = partition_data(ds.x, ds.y, grid)
+    x = np.asarray(data.x)
+    m = np.asarray(data.mask)
+    for p in range(grid.num_partitions):
+        ix, iy = grid.cell_of(p)
+        pts = x[p][m[p] > 0]
+        if len(pts) == 0:
+            continue
+        assert pts[:, 0].min() >= grid.x_edges[ix] - 1e-5
+        assert pts[:, 0].max() <= grid.x_edges[ix + 1] + 1e-5
+        assert pts[:, 1].min() >= grid.y_edges[iy] - 1e-5
+        assert pts[:, 1].max() <= grid.y_edges[iy + 1] + 1e-5
+
+
+def test_pole_partitions_are_sparse():
+    """Uniform-on-sphere sampling must reproduce the paper's unbalanced
+    partitioning (pole partitions have fewer observations)."""
+    ds = e3sm_like_field(n=48602, seed=0)
+    grid = make_grid(ds.x, 20, 20)
+    data = partition_data(ds.x, ds.y, grid)
+    counts = np.asarray(data.counts).reshape(20, 20)  # (iy, ix)
+    pole_rows = counts[[0, -1]].mean()
+    equator_rows = counts[9:11].mean()
+    assert pole_rows < 0.5 * equator_rows
+    # the paper's numbers: 8..222 per partition, median ~150
+    assert np.median(counts) > 50
+
+
+@given(gx=st.integers(2, 7), gy=st.integers(2, 7), wrap=st.booleans())
+@settings(max_examples=25, deadline=None)
+def test_neighbor_table_symmetry(gx, gy, wrap):
+    """j in N_k iff k in N_j; self always slot 0; wrap only in x."""
+    grid = make_grid(np.zeros((1, 2), np.float32), gx, gy, wrap_x=wrap,
+                     bounds=(0.0, 1.0, 0.0, 1.0))
+    tbl = neighbor_table(grid)
+    P = grid.num_partitions
+    assert (tbl[:, 0] == np.arange(P)).all()
+    for j in range(P):
+        for s in range(1, 5):
+            k = tbl[j, s]
+            if k < 0:
+                continue
+            assert j in tbl[k, 1:], (j, k)
+    # edge-sharing counts: interior partitions have 4 neighbors
+    interior = [
+        grid.index_of(ix, iy) for ix in range(1, gx - 1) for iy in range(1, gy - 1)
+    ]
+    for j in interior:
+        assert (tbl[j, 1:] >= 0).all()
+
+
+@given(gx=st.integers(2, 6), gy=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_direction_permutations_inverse_pairs(gx, gy):
+    """east/west (and north/south) perms are inverse on interior cells."""
+    grid = make_grid(np.zeros((1, 2), np.float32), gx, gy, bounds=(0, 1, 0, 1))
+    perm = direction_permutations(grid)
+    tbl = neighbor_table(grid)
+    for j in range(grid.num_partitions):
+        if tbl[j, 1] >= 0:  # has east neighbor
+            assert perm[2][perm[1][j]] == j  # west(east(j)) == j
+        if tbl[j, 3] >= 0:
+            assert perm[4][perm[3][j]] == j
+
+
+def test_boundary_probe_count_matches_paper_scale():
+    """20x20 unwrapped grid with 23 probes/edge ~= the paper's 17,556."""
+    grid = make_grid(np.zeros((1, 2), np.float32), 20, 20, bounds=(0, 1, 0, 1))
+    probes = boundary_probes(grid, probes_per_edge=23)
+    total = probes.points.shape[0] * probes.points.shape[1]
+    assert total == (19 * 20 + 20 * 19) * 23  # 17,480 — paper reports 17,556
+    # every probe lies on the shared edge of its (left, right) pair
+    pts = np.asarray(probes.points)
+    for e in range(probes.left.shape[0]):
+        l, r = int(probes.left[e]), int(probes.right[e])
+        lx, ly = grid.cell_of(l)
+        rx, ry = grid.cell_of(r)
+        assert abs(lx - rx) + abs(ly - ry) == 1
+
+
+def test_partition_centers_shape():
+    grid = make_grid(np.zeros((1, 2), np.float32), 4, 3, bounds=(0, 4, 0, 3))
+    c = partition_centers(grid)
+    assert c.shape == (12, 2)
+    np.testing.assert_allclose(c[0], [0.5, 0.5])
+    np.testing.assert_allclose(c[-1], [3.5, 2.5])

