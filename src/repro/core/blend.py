@@ -15,18 +15,28 @@ boundary is local to that neighbor's rank in production).
 
 Variances combine as the blend of second moments (a conservative mixture
 bound): var = sum_i w_i (var_i + mean_i^2) - mean^2.
+
+Serving path: evaluation runs against a ``repro.core.posterior``
+PosteriorCache — the P local posteriors are factorized ONCE (O(P m^3),
+amortized across every query batch; pass ``cache=`` to amortize across
+calls too), and each corner is then one batched vmap of O(m^2) cached-
+factor evaluations. The seed implementation re-ran a full Cholesky per
+query point per corner; at the paper's P=400 / m=25 scale the cached path
+is the difference between an analysis script and a serving endpoint (see
+benchmarks/bench_predict.py, launch/serve.py --gp).
 """
 from __future__ import annotations
 
-from typing import Tuple
+import functools
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import svgp
+from repro.core import posterior
 from repro.core.partition import PartitionGrid
-from repro.core.psvgp import PSVGPState, PSVGPStatic
+from repro.core.psvgp import PSVGPState, PSVGPStatic, posterior_cache
 
 
 def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
@@ -58,29 +68,25 @@ def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
     return ids, w
 
 
-def predict_blended(
-    static: PSVGPStatic,
-    state: PSVGPState,
-    grid: PartitionGrid,
-    points: jnp.ndarray,
+@functools.partial(jax.jit, static_argnames=("cov_fn",))
+def _blend_eval(
+    cache: posterior.PosteriorCache,
+    cov_fn: Callable,
+    xq: jnp.ndarray,
+    ids: jnp.ndarray,
+    w: jnp.ndarray,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Continuous stitched prediction at arbitrary points (N, 2)."""
-    pts = np.asarray(points, np.float32)
-    ids, w = _corner_ids_weights(grid, pts)
-    ids = jnp.asarray(ids)
-    w = jnp.asarray(w)
-    scfg = static.cfg.svgp
+    """All N points against all 4 corners — cached factors only, no
+    factorization anywhere inside."""
 
     def eval_corner(c):
-        params_c = jax.tree.map(lambda a: jnp.take(a, ids[:, c], axis=0), state.params)
+        cache_c = posterior.take_cache(cache, ids[:, c])  # leaves (N, ...)
 
-        def one(params, x):
-            mean, var = svgp.predict(
-                params, static.cov_fn, x[None], jitter=scfg.jitter, whitened=scfg.whitened
-            )
+        def one(ca, xi):
+            mean, var = posterior.predict_cached(ca, cov_fn, xi[None])
             return mean[0], var[0]
 
-        return jax.vmap(one)(params_c, jnp.asarray(pts))
+        return jax.vmap(one)(cache_c, xq)
 
     means, varis = zip(*(eval_corner(c) for c in range(4)))
     means = jnp.stack(means, axis=1)  # (N, 4)
@@ -89,3 +95,22 @@ def predict_blended(
     second = jnp.sum(w * (varis + means**2), axis=1)
     var = jnp.maximum(second - mean**2, 1e-12)
     return mean, var
+
+
+def predict_blended(
+    static: PSVGPStatic,
+    state: PSVGPState,
+    grid: PartitionGrid,
+    points: jnp.ndarray,
+    cache: posterior.PosteriorCache | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Continuous stitched prediction at arbitrary points (N, 2).
+
+    Pass a precomputed ``cache`` (``psvgp.posterior_cache``) when issuing
+    repeated query batches against one trained state — the serving loop in
+    ``repro.launch.serve --gp`` does exactly that."""
+    pts = np.asarray(points, np.float32)
+    ids, w = _corner_ids_weights(grid, pts)
+    if cache is None:
+        cache = posterior_cache(static, state)
+    return _blend_eval(cache, static.cov_fn, jnp.asarray(pts), jnp.asarray(ids), jnp.asarray(w))

@@ -5,41 +5,63 @@
 * Boundary RMSD — root mean square difference between the predictions of
   neighboring local models at probe locations equally spaced along shared
   boundaries (the paper uses 17,556 such locations for the 20x20 grid).
+
+All metrics accept an optional precomputed ``PosteriorCache`` (see
+``repro.core.posterior``); pass one when evaluating several metrics against
+the same trained state so the P Cholesky factorizations run once, not once
+per metric.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
-import jax
 import jax.numpy as jnp
 
 from repro.core.neighbors import BoundaryProbes
 from repro.core.partition import PartitionedData
-from repro.core.psvgp import PSVGPState, PSVGPStatic, predict_at_partitions, predict_local
+from repro.core.posterior import PosteriorCache
+from repro.core.psvgp import (
+    PSVGPState,
+    PSVGPStatic,
+    posterior_cache,
+    predict_at_partitions,
+    predict_local,
+)
 
 
-def rmspe(static: PSVGPStatic, state: PSVGPState, data: PartitionedData) -> jnp.ndarray:
+def rmspe(
+    static: PSVGPStatic,
+    state: PSVGPState,
+    data: PartitionedData,
+    cache: PosteriorCache | None = None,
+) -> jnp.ndarray:
     """Global in-sample root-mean-square prediction error."""
-    mean, _ = predict_local(static, state, data.x)  # (P, n_max)
+    mean, _ = predict_local(static, state, data.x, cache=cache)  # (P, n_max)
     se = (mean - data.y) ** 2 * data.mask
     return jnp.sqrt(jnp.sum(se) / jnp.maximum(jnp.sum(data.mask), 1.0))
 
 
 def boundary_rmsd(
-    static: PSVGPStatic, state: PSVGPState, probes: BoundaryProbes
+    static: PSVGPStatic,
+    state: PSVGPState,
+    probes: BoundaryProbes,
+    cache: PosteriorCache | None = None,
 ) -> jnp.ndarray:
     """RMS disagreement between the two models sharing each boundary."""
-    mean_l, _ = predict_at_partitions(static, state, probes.left, probes.points)
-    mean_r, _ = predict_at_partitions(static, state, probes.right, probes.points)
+    if cache is None:
+        cache = posterior_cache(static, state)
+    mean_l, _ = predict_at_partitions(static, state, probes.left, probes.points, cache=cache)
+    mean_r, _ = predict_at_partitions(static, state, probes.right, probes.points, cache=cache)
     return jnp.sqrt(jnp.mean((mean_l - mean_r) ** 2))
 
 
 def per_partition_rmspe(
-    static: PSVGPStatic, state: PSVGPState, data: PartitionedData
+    static: PSVGPStatic,
+    state: PSVGPState,
+    data: PartitionedData,
+    cache: PosteriorCache | None = None,
 ) -> jnp.ndarray:
     """(P,) in-sample RMSPE per partition (diagnostic; pole partitions in the
     paper are the hard ones)."""
-    mean, _ = predict_local(static, state, data.x)
+    mean, _ = predict_local(static, state, data.x, cache=cache)
     se = (mean - data.y) ** 2 * data.mask
     cnt = jnp.maximum(jnp.sum(data.mask, axis=1), 1.0)
     return jnp.sqrt(jnp.sum(se, axis=1) / cnt)
@@ -51,10 +73,11 @@ def holdout_rmspe(
     x_hold: jnp.ndarray,
     y_hold: jnp.ndarray,
     mask_hold: jnp.ndarray,
+    cache: PosteriorCache | None = None,
 ) -> jnp.ndarray:
     """Out-of-sample RMSPE on held-out points already routed to partitions
     (x_hold: (P, Q, d)) — beyond-paper diagnostic (the paper reports
     in-sample only)."""
-    mean, _ = predict_local(static, state, x_hold)
+    mean, _ = predict_local(static, state, x_hold, cache=cache)
     se = (mean - y_hold) ** 2 * mask_hold
     return jnp.sqrt(jnp.sum(se) / jnp.maximum(jnp.sum(mask_hold), 1.0))

@@ -18,6 +18,14 @@ Two communication modes (DESIGN.md §2):
 The per-partition models are the ``repro.core.svgp`` SVGP; everything is
 stacked on a leading partition axis and vmapped, so one XLA program trains
 all 400 partitions at once — the SPMD analogue of the paper's MPI ranks.
+
+Prediction is served through the ``repro.core.posterior`` PosteriorCache:
+``posterior_cache`` factorizes all P local posteriors once (per trained
+state), and ``predict_local`` / ``predict_at_partitions`` /
+``blend.predict_blended`` evaluate O(m^2) against those cached factors —
+the serving path for the paper's E3SM in-situ setting. Entry points:
+``repro.launch.serve --gp`` (batched query loop with latency/throughput
+report) and ``benchmarks.bench_predict`` (cached-vs-seed speedup gate).
 """
 from __future__ import annotations
 
@@ -28,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import svgp
+from repro.core import posterior, svgp
 from repro.core.neighbors import NUM_SLOTS, direction_permutations, neighbor_table
 from repro.core.partition import PartitionedData
 from repro.core.sampler import (
@@ -84,7 +92,11 @@ def init(key: jax.Array, cfg: PSVGPConfig, data: PartitionedData) -> PSVGPState:
     P = data.num_partitions
     keys = jax.random.split(key, P)
     init_one = functools.partial(svgp.init_svgp_params, cfg=cfg.svgp)
-    params = jax.vmap(lambda k, x: init_one(k, x_init=x))(keys, data.x)
+    # mask keeps inducing-point sampling on each partition's VALID rows —
+    # padded rows replicate the first point and would collapse Kmm.
+    params = jax.vmap(lambda k, x, mk: init_one(k, x_init=x, mask=mk))(
+        keys, data.x, data.mask
+    )
     return PSVGPState(params=params, opt=adam_init(params), step=jnp.zeros((), jnp.int32))
 
 
@@ -276,30 +288,42 @@ def fit(
 
 
 # --------------------------------------------------------------------------
-# Prediction / evaluation
+# Prediction / evaluation — all routed through the PosteriorCache subsystem
+# (repro.core.posterior): factorize the P local posteriors ONCE per trained
+# state, then every prediction is O(Q m^2) against the cached factors.
 # --------------------------------------------------------------------------
 
 
+def posterior_cache(static: PSVGPStatic, state: PSVGPState) -> posterior.PosteriorCache:
+    """P-stacked prediction cache for the current state — one batched
+    O(P m^3) factorization; reuse it across every prediction call below."""
+    scfg = static.cfg.svgp
+    return posterior.build_cache_stacked(
+        state.params, static.cov_fn, jitter=scfg.jitter, whitened=scfg.whitened
+    )
+
+
 def predict_local(
-    static: PSVGPStatic, state: PSVGPState, xstar: jnp.ndarray
+    static: PSVGPStatic,
+    state: PSVGPState,
+    xstar: jnp.ndarray,
+    cache: posterior.PosteriorCache | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Each partition's model predicts at its OWN rows of xstar (P, Q, d)."""
-    scfg = static.cfg.svgp
-
-    def one(params, xq):
-        return svgp.predict(params, static.cov_fn, xq, jitter=scfg.jitter, whitened=scfg.whitened)
-
-    return jax.vmap(one)(state.params, xstar)
+    if cache is None:
+        cache = posterior_cache(static, state)
+    return posterior.predict_cached_stacked(cache, static.cov_fn, xstar)
 
 
 def predict_at_partitions(
-    static: PSVGPStatic, state: PSVGPState, part_ids: jnp.ndarray, points: jnp.ndarray
+    static: PSVGPStatic,
+    state: PSVGPState,
+    part_ids: jnp.ndarray,
+    points: jnp.ndarray,
+    cache: posterior.PosteriorCache | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Predict ``points`` (E, Q, d) with the models of ``part_ids`` (E,)."""
-    params_e = jax.tree.map(lambda a: jnp.take(a, part_ids, axis=0), state.params)
-    scfg = static.cfg.svgp
-
-    def one(params, xq):
-        return svgp.predict(params, static.cov_fn, xq, jitter=scfg.jitter, whitened=scfg.whitened)
-
-    return jax.vmap(one)(params_e, points)
+    if cache is None:
+        cache = posterior_cache(static, state)
+    cache_e = posterior.take_cache(cache, part_ids)
+    return posterior.predict_cached_stacked(cache_e, static.cov_fn, points)

@@ -32,6 +32,7 @@ from repro.core.partition import PartitionGrid
 from repro.core.psvgp import PSVGPConfig, PSVGPState, _loss_one
 from repro.core.sampler import sample_row_indices
 from repro.optim import adam_update
+from repro.runtime import compat
 
 
 def _row_axes(axes: Sequence[str]) -> Tuple[str, ...]:
@@ -153,7 +154,7 @@ def make_spmd_step(
         step=P(),
     )
 
-    step_fn = jax.shard_map(
+    step_fn = compat.shard_map(
         step_shard,
         mesh=mesh,
         in_specs=(state_specs, P(), pspec, pspec, pspec, pspec, pspec),

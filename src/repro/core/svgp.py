@@ -26,7 +26,14 @@ import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
-from repro.gp.covariances import CovarianceParams, init_covariance_params, kdiag
+from repro.core.posterior import (
+    build_cache,
+    kmm_chol as _kmm_chol,
+    predict_cached,
+    projection as _projection,
+    s_chol,
+)
+from repro.gp.covariances import CovarianceParams, init_covariance_params
 from repro.gp.likelihoods import gaussian_expected_loglik
 
 _LOG2PI = 1.8378770664093453
@@ -58,13 +65,32 @@ def init_svgp_params(
     key: jax.Array,
     cfg: SVGPConfig,
     x_init: jnp.ndarray | None = None,
+    mask: jnp.ndarray | None = None,
     dtype=jnp.float32,
 ) -> SVGPParams:
-    """Initialize; inducing points from data subsample if provided, else N(0,1)."""
+    """Initialize; inducing points from data subsample if provided, else N(0,1).
+
+    mask: optional (n,) {0,1} row validity for ``x_init`` (the PSVGP layer's
+    partitions are padded to a common n_max). Sampling is restricted to valid
+    rows, uniformly WITHOUT replacement — padded slots replicate the
+    partition's first point, and drawing them would stack duplicate inducing
+    points there, making Kmm singular up to jitter (chaotic Cholesky
+    gradients, wasted inducing capacity on exactly the small edge partitions
+    that need it most). Partitions with fewer valid points than m still get
+    duplicates (there is nothing else to sample); jitter handles those.
+    """
     m, d = cfg.num_inducing, cfg.input_dim
     kz, = jax.random.split(key, 1)
     if x_init is not None:
-        idx = jax.random.choice(kz, x_init.shape[0], (m,), replace=x_init.shape[0] < m)
+        if mask is None:
+            idx = jax.random.choice(kz, x_init.shape[0], (m,), replace=x_init.shape[0] < m)
+        else:
+            # Uniform top-k over valid rows (same idiom as the minibatch
+            # sampler): distinct valid rows first, padded rows only when the
+            # partition runs out of points. vmap-safe (no data-dependent
+            # shapes), unlike random.choice with a probability vector.
+            scores = jax.random.uniform(kz, (x_init.shape[0],)) + (mask - 1.0) * 1e9
+            idx = jax.lax.top_k(scores, m)[1]
         z = x_init[idx].astype(dtype)
     else:
         z = jax.random.normal(kz, (m, d), dtype)
@@ -78,45 +104,9 @@ def init_svgp_params(
     )
 
 
-def s_chol(s_tril: jnp.ndarray) -> jnp.ndarray:
-    """Constrained Cholesky factor of S_star: strictly-lower + exp(diag)."""
-    ltri = jnp.tril(s_tril, -1)
-    return ltri + jnp.diag(jnp.exp(jnp.diagonal(s_tril)))
-
-
-def _kmm_chol(params: SVGPParams, cov_fn: Callable, jitter: float) -> jnp.ndarray:
-    m = params.z.shape[0]
-    kmm = cov_fn(params.cov, params.z, params.z)
-    return jnp.linalg.cholesky(kmm + jitter * jnp.eye(m, dtype=kmm.dtype))
-
-
-def _projection(
-    params: SVGPParams, cov_fn: Callable, x: jnp.ndarray, jitter: float, use_pallas: bool
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Shared O(B m^2) hot path.
-
-    Returns (lk, kdiag_res, lmm) where
-      lk   (m, B): Lmm^{-1} K_mz^T   (so a_i = Lmm^{-T} lk_i, A = Kmm^{-1}k_i)
-      kdiag_res (B,): k~_ii = k_ii - ||lk_i||^2   (eq. 3's  k~ term)
-      lmm  (m, m): chol(Kmm)
-    When ``use_pallas`` is set, K(X,Z) and the triangular projection run in
-    the fused Pallas kernel (repro.kernels); otherwise pure jnp.
-    """
-    lmm = _kmm_chol(params, cov_fn, jitter)
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        knm, lk_t, q_diag = kops.svgp_projection(
-            x, params.z, params.cov.log_lengthscale, params.cov.log_variance, lmm
-        )
-        del knm
-        lk = lk_t.T  # (m, B)
-        kd = kdiag(params.cov, x) - q_diag
-    else:
-        knm = cov_fn(params.cov, x, params.z)  # (B, m)
-        lk = jsl.solve_triangular(lmm, knm.T, lower=True)  # (m, B)
-        kd = kdiag(params.cov, x) - jnp.sum(lk * lk, axis=0)
-    return lk, kd, lmm
+# s_chol / _kmm_chol / _projection now live in repro.core.posterior (the
+# shared prediction-math module); re-imported above so the ELBO below and
+# external callers keep their historical access path.
 
 
 def q_f(
@@ -220,8 +210,11 @@ def predict(
     whitened: bool = False,
     include_noise: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Predictive mean/variance at new locations (latent f by default)."""
-    fmean, fvar = q_f(params, cov_fn, xstar, jitter, whitened)
-    if include_noise:
-        fvar = fvar + jnp.exp(-params.log_beta)
-    return fmean, fvar
+    """Predictive mean/variance at new locations (latent f by default).
+
+    One-shot path: factorizes Kmm, predicts, discards the factors. Callers
+    issuing MANY predictions against a fixed posterior should build a
+    ``repro.core.posterior.PosteriorCache`` once and call ``predict_cached``
+    (this function is exactly build + predict, so the two agree)."""
+    cache = build_cache(params, cov_fn, jitter=jitter, whitened=whitened)
+    return predict_cached(cache, cov_fn, xstar, include_noise=include_noise)

@@ -2,7 +2,8 @@
 
 Handles the TPU alignment contract (pad B to the sublane tile, m to the
 128 lane width, zero-pad W) and strips the padding from outputs, so callers
-(``repro.core.svgp._projection``) see clean shapes. On CPU the kernels run
+(``repro.core.posterior.projection`` / ``predict_cached``) see clean
+shapes. On CPU the kernels run
 in interpret mode — same kernel body, Python evaluation — which is how this
 container validates them; on a real TPU backend they compile to Mosaic.
 """
@@ -16,6 +17,7 @@ import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
 from repro.kernels import ref
+from repro.kernels.predict import posterior_predict_pallas
 from repro.kernels.rbf import rbf_cross_cov_pallas
 from repro.kernels.svgp_proj import svgp_projection_pallas
 
@@ -104,6 +106,48 @@ def svgp_projection_ref(x, z, log_lengthscale, log_variance, lmm):
 
 
 svgp_projection.defvjp(_svgp_projection_fwd, _svgp_projection_bwd)
+
+
+def posterior_predict(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused cached-posterior prediction, padding-safe (serving hot path).
+
+    x (Q, d) queries; z (m, d); w/u (m, m) cached factors; c (m,) cached
+    projected mean (see repro.core.posterior). Returns (mean (Q,), fvar
+    (Q,)) with TRUE shapes — fvar NOT yet clamped or noise-augmented
+    (callers own that, matching the jnp path in posterior.predict_cached).
+
+    Zero-padding w/u/c makes the padded inducing slots exactly inert; the
+    padded query rows are computed then stripped.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    Q, d = x.shape
+    m = z.shape[0]
+    bq = min(_LANE, _round_up(Q, _SUBLANE))
+    Qp, mp = _round_up(Q, bq), _round_up(m, _LANE)
+    xp = jnp.pad(x, ((0, Qp - Q), (0, 0)))
+    zp = jnp.pad(z, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, mp - m), (0, mp - m)))
+    up = jnp.pad(u, ((0, mp - m), (0, mp - m)))
+    cp = jnp.pad(c, (0, mp - m))
+    mean, fvar = posterior_predict_pallas(
+        xp, zp, log_lengthscale, log_variance, wp, up, cp, block_q=bq, interpret=interpret
+    )
+    return mean[:Q], fvar[:Q]
+
+
+def posterior_predict_ref(x, z, log_lengthscale, log_variance, w, u, c):
+    """Pure-jnp reference with the same signature (the allclose target)."""
+    return ref.posterior_predict(x, z, log_lengthscale, log_variance, w, u, c)
 
 
 # Reference implementation re-exported so benchmarks/tests can compare the

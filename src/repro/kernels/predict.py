@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused cached-posterior prediction (serving hot path).
+
+Per (block_q x m_pad) tile and in ONE VMEM residency of the query block:
+    knm  = K(X*, Z)                      (VPU, explicit-diff RBF)
+    mean = knm @ c                       (VPU reduction against resident c)
+    lk   = knm @ W^T                     (MXU, W = Lmm^{-1} resident)
+    su   = knm @ U^T                     (MXU, U = S-factor resident)
+    var  = k_** - rowsum(lk^2) + rowsum(su^2)
+
+The unfused path writes knm to HBM and reads it back TWICE (once per
+projection); fusing removes both (Q x m_pad) round-trips and never
+materializes lk/su in HBM at all — the kernel's only HBM traffic is the
+query block in and two (Q,) vectors out. W, U and c stay resident in VMEM
+across the whole grid (2 m_pad^2 + m_pad floats; m_pad <= 256 -> <= 513 KiB).
+
+Same alignment contract as ``svgp_proj``: caller pads Q to the block, m to
+the 128-lane width, and zero-pads W/U/c so padded inducing slots are inert
+(zero COLUMNS of W/U kill the garbage knm columns; zero c entries kill them
+in the mean). k_** for the stationary RBF is the process variance, exact
+regardless of padding. Dispatch + padding live in ``kernels/ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _predict_kernel_body(
+    x_ref, z_ref, invl_ref, var_ref, w_ref, u_ref, c_ref, mean_ref, fvar_ref
+):
+    x = x_ref[...]  # (bq, d)
+    z = z_ref[...]  # (m, d)
+    inv_l = invl_ref[...]  # (1, d)
+    xs = x * inv_l
+    zs = z * inv_l
+    diff = xs[:, None, :] - zs[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)  # (bq, m)
+    var = var_ref[0, 0]
+    knm = var * jnp.exp(-0.5 * r2)
+    # VPU: mean = knm @ c with c resident as a (1, m) row.
+    mean_ref[...] = jnp.sum(knm * c_ref[...], axis=-1, keepdims=True)
+    # MXU: two (bq, m) @ (m, m) projections, fp32 accumulation.
+    lk = jax.lax.dot_general(
+        knm, w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),  # knm @ W^T
+        preferred_element_type=jnp.float32,
+    ).astype(knm.dtype)
+    su = jax.lax.dot_general(
+        knm, u_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),  # knm @ U^T
+        preferred_element_type=jnp.float32,
+    ).astype(knm.dtype)
+    fvar_ref[...] = (
+        var
+        - jnp.sum(lk * lk, axis=-1, keepdims=True)
+        + jnp.sum(su * su, axis=-1, keepdims=True)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def posterior_predict_pallas(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (Q, d), z (m, d), w/u (m, m), c (m,) -> (mean (Q,), fvar (Q,)).
+
+    Caller contract: Q % block_q == 0, m % 128 == 0, and w/u/c are
+    ZERO-PADDED outside the true m_true block (see module docstring).
+    """
+    Q, d = x.shape
+    m, _ = z.shape
+    grid = (Q // block_q,)
+    inv_l = jnp.exp(-log_lengthscale).reshape(1, d).astype(x.dtype)
+    var = jnp.exp(log_variance).reshape(1, 1).astype(x.dtype)
+    c_row = c.reshape(1, m).astype(x.dtype)
+    mean, fvar = pl.pallas_call(
+        _predict_kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),  # W resident across grid
+            pl.BlockSpec((m, m), lambda i: (0, 0)),  # U resident across grid
+            pl.BlockSpec((1, m), lambda i: (0, 0)),  # c resident across grid
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, 1), x.dtype),
+            jax.ShapeDtypeStruct((Q, 1), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, z, inv_l, var, w, u, c_row)
+    return mean[:, 0], fvar[:, 0]

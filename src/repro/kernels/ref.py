@@ -44,3 +44,27 @@ def svgp_projection(
     lk_t = knm @ w.T
     q_diag = jnp.sum(lk_t * lk_t, axis=-1)
     return knm, lk_t, q_diag
+
+
+def posterior_predict(
+    x: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused cached-posterior prediction (the serving hot path).
+
+    w: (m, m) = Lmm^{-1};  u: (m, m) = Sl^T A;  c: (m,) projected mean
+    (see repro.core.posterior for the factor definitions). Returns:
+      mean (Q,)  K(X*,Z) @ c
+      fvar (Q,)  k_** - ||W k_*||^2 + ||U k_*||^2   (un-clamped)
+    """
+    knm = rbf_cross_cov(x, z, log_lengthscale, log_variance)
+    mean = knm @ c
+    lk = knm @ w.T
+    su = knm @ u.T
+    fvar = jnp.exp(log_variance) - jnp.sum(lk * lk, axis=-1) + jnp.sum(su * su, axis=-1)
+    return mean, fvar

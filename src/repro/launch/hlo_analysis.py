@@ -79,7 +79,9 @@ class RooflineTerms(NamedTuple):
 
 
 def roofline(compiled) -> RooflineTerms:
-    ca = compiled.cost_analysis()
+    from repro.runtime import compat
+
+    ca = compat.cost_analysis(compiled)
     flops = float(ca.get("flops", 0.0))
     byts = float(ca.get("bytes accessed", 0.0))
     breakdown = collective_bytes(compiled.as_text())

@@ -1,7 +1,18 @@
-"""Serving driver: batched prefill + autoregressive decode.
+"""Serving driver: batched prefill + autoregressive decode — and the GP
+serving mode for the stitched PSVGP surface.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --batch 4 --prompt-len 64 --gen 32
+
+GP mode (the paper's E3SM in-situ setting: train the partitioned surface,
+then answer query batches at serving rates). Trains a PSVGP on the
+synthetic E3SM-like field, factorizes all local posteriors ONCE into a
+``repro.core.posterior.PosteriorCache``, and runs a batched query loop
+against the cached factors with a latency/throughput report:
+
+  PYTHONPATH=src python -m repro.launch.serve --gp \
+      --gp-grid 8 --gp-m 10 --gp-train-iters 200 \
+      --gp-batch 2048 --gp-requests 50
 """
 from __future__ import annotations
 
@@ -16,16 +27,88 @@ from repro.configs import get, get_smoke
 from repro.runtime.steps import init_train_state, make_decode_step, make_prefill_step
 
 
+def serve_gp(args) -> None:
+    """Batched query loop over the blended PSVGP surface (cached factors)."""
+    from repro.core import psvgp, svgp
+    from repro.core.blend import predict_blended
+    from repro.core.partition import make_grid, partition_data
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=args.gp_n, seed=args.seed)
+    grid = make_grid(ds.x, args.gp_grid, args.gp_grid)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=args.gp_m, input_dim=2),
+        delta=0.25, batch_size=32, learning_rate=0.05,
+    )
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(args.seed), cfg, data)
+    t0 = time.time()
+    state = psvgp.fit(static, state, data, args.gp_train_iters)
+    jax.block_until_ready(state.params)
+    print(f"trained P={grid.num_partitions} partitions, m={args.gp_m}, "
+          f"{args.gp_train_iters} iters in {time.time()-t0:.1f} s")
+
+    t0 = time.time()
+    cache = psvgp.posterior_cache(static, state)
+    jax.block_until_ready(cache)
+    print(f"posterior cache built in {(time.time()-t0)*1e3:.1f} ms "
+          f"(one O(P m^3) factorization, reused by every request)")
+
+    # synthetic request stream: uniform query batches over the domain
+    rng = np.random.default_rng(args.seed + 1)
+    lo = ds.x.min(axis=0)
+    hi = ds.x.max(axis=0)
+    B = args.gp_batch
+    batches = [
+        jnp.asarray(rng.uniform(lo, hi, (B, 2)).astype(np.float32))
+        for _ in range(args.gp_requests)
+    ]
+    # warmup compiles the fixed-shape query program
+    mean, var = predict_blended(static, state, grid, batches[0], cache=cache)
+    jax.block_until_ready((mean, var))
+
+    lat = []
+    t_all = time.time()
+    for q in batches:
+        t0 = time.time()
+        mean, var = predict_blended(static, state, grid, q, cache=cache)
+        jax.block_until_ready((mean, var))
+        lat.append(time.time() - t0)
+    wall = time.time() - t_all
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    qps = args.gp_requests * B / wall
+    print(f"served {args.gp_requests} requests x {B} points in {wall:.2f} s")
+    print(f"latency/request ms: p50={np.percentile(lat_ms, 50):.2f} "
+          f"p90={np.percentile(lat_ms, 90):.2f} p99={np.percentile(lat_ms, 99):.2f}")
+    print(f"throughput: {qps:,.0f} points/s")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--gp", action="store_true", help="serve the stitched PSVGP surface")
+    ap.add_argument("--gp-n", type=int, default=20_000, help="training observations")
+    ap.add_argument("--gp-grid", type=int, default=8, help="partition grid is gp-grid^2")
+    ap.add_argument("--gp-m", type=int, default=10, help="inducing points per partition")
+    ap.add_argument("--gp-train-iters", type=int, default=200)
+    ap.add_argument("--gp-batch", type=int, default=2048, help="query points per request")
+    ap.add_argument("--gp-requests", type=int, default=50)
     args = ap.parse_args()
+
+    if args.gp:
+        if args.gp_requests < 1 or args.gp_batch < 1:
+            ap.error("--gp-requests and --gp-batch must be >= 1")
+        serve_gp(args)
+        return
+    if not args.arch:
+        ap.error("--arch required (or --gp for the PSVGP surface)")
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     key = jax.random.PRNGKey(args.seed)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models.common import Params, dense_init
 from repro.models.config import ModelConfig, MoEConfig
+from repro.runtime import compat
 
 
 def init_moe_params(key: jax.Array, cfg: ModelConfig) -> Params:
@@ -50,7 +51,7 @@ def moe_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarra
     auto-partitioner replicates the D-wide dispatch scatters otherwise
     (measured: ~5 GiB all-gathers per layer, EXPERIMENTS.md §Perf-2).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if (
         mesh is not None
         and "model" in mesh.axis_names
@@ -214,7 +215,7 @@ def _moe_forward_spmd(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh) -> Tupl
         out_l = jax.lax.psum(out_l, "model")
         return out_l.reshape(Bl, S, D), aux_l
 
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, P(), P("model"), P("model"), P("model")),

@@ -1,0 +1,112 @@
+"""JAX API compatibility shims.
+
+The codebase targets the modern jax API surface (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``, typed mesh axes), but
+the pinned container runs jax 0.4.37 where those names either live under
+``jax.experimental`` or do not exist yet. Every call site imports from THIS
+module instead of feature-detecting locally, so the day the pin moves the
+shims collapse to re-exports.
+
+Exports
+  shard_map(f, *, mesh, in_specs, out_specs, check_vma=...)
+      Modern keyword signature; maps ``check_vma`` onto the legacy
+      ``check_rep`` flag when falling back to jax.experimental.shard_map.
+  get_abstract_mesh() -> Mesh | None
+      The mesh of the innermost ``set_mesh`` scope (None outside one).
+  set_mesh(mesh)
+      Context manager activating ``mesh``; legacy fallback enters the mesh
+      itself (Mesh has been a context manager since 0.3).
+  make_mesh(axis_shapes, axis_names)
+      ``jax.make_mesh`` minus the ``axis_types`` argument, which 0.4.37
+      does not accept (axes behave as Auto there, matching our usage).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+) -> Callable:
+    """Modern ``jax.shard_map`` signature on any supported jax."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    return _legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma)
+
+
+def get_abstract_mesh() -> Mesh | None:
+    """Active mesh context, or None when no mesh scope is open."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return None
+        return mesh
+    from jax._src import mesh as _mesh_lib
+
+    mesh = _mesh_lib.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def set_mesh(mesh: Mesh):
+    """Context manager activating ``mesh`` for sharding propagation."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # legacy: ``with mesh:`` sets the thread-resource env
+
+
+def named_shardings(mesh: Mesh, tree: Any) -> Any:
+    """Make an in/out_shardings pytree acceptable to this jax's ``jit``.
+
+    Modern jax consumes raw PartitionSpecs (and None = compiler-chosen)
+    inside a ``set_mesh`` scope — the tree passes through UNCHANGED there,
+    preserving auto-sharding semantics. 0.4.37 requires concrete Sharding
+    objects, so on legacy jax PartitionSpec leaves become NamedShardings
+    and None leaves fall back to replicated (the closest expressible
+    meaning; 0.4.37 has no per-leaf 'unspecified')."""
+    if hasattr(jax, "set_mesh"):  # modern: raw specs/None are first-class
+        return tree
+
+    def conv(leaf):
+        if leaf is None:
+            return NamedSharding(mesh, PartitionSpec())
+        if isinstance(leaf, PartitionSpec):
+            return NamedSharding(mesh, leaf)
+        return leaf
+
+    return jax.tree.map(
+        conv, tree, is_leaf=lambda l: l is None or isinstance(l, PartitionSpec)
+    )
+
+
+def cost_analysis(compiled: Any) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on any supported jax
+    (jax <= 0.4.x returns a one-entry list of per-program dicts)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]) -> Mesh:
+    """``jax.make_mesh`` with Auto-typed axes on any supported jax."""
+    try:
+        from jax.sharding import AxisType  # modern jax
+
+        return jax.make_mesh(
+            tuple(axis_shapes), tuple(axis_names),
+            axis_types=(AxisType.Auto,) * len(tuple(axis_names)),
+        )
+    except ImportError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))

@@ -1,0 +1,82 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+hypothesis is an OPTIONAL dev dependency (see pyproject.toml); the container
+that runs tier-1 does not ship it. The property tests only use three scalar
+strategies (integers / floats / booleans), so this shim emulates them with a
+deterministic per-test PRNG sweep: each ``@given`` test body runs
+``max_examples`` times over pseudo-random draws. No shrinking, no database,
+no assume() — if a property fails here, rerun with real hypothesis installed
+to minimize the counterexample.
+
+Usage (the pattern in the test files):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, st
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+st = SimpleNamespace(integers=_integers, floats=_floats, booleans=_booleans)
+
+_DEFAULT_EXAMPLES = 10
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    """Records max_examples on the function for ``given`` to pick up."""
+
+    def deco(f):
+        f._shim_max_examples = max_examples
+        return f
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per example with deterministic draws (seeded by the
+    test name, so failures reproduce run-to-run)."""
+
+    def deco(f):
+        def wrapper():
+            # read the attribute from the wrapper too: real hypothesis
+            # accepts @settings above OR below @given, and the above-order
+            # stamps the wrapper, not f
+            n = getattr(
+                wrapper, "_shim_max_examples",
+                getattr(f, "_shim_max_examples", _DEFAULT_EXAMPLES),
+            )
+            rng = random.Random(f.__qualname__)
+            for _ in range(n):
+                drawn = [s._draw(rng) for s in arg_strategies]
+                drawn_kw = {k: s._draw(rng) for k, s in kw_strategies.items()}
+                f(*drawn, **drawn_kw)
+
+        # NOT functools.wraps: that would copy __wrapped__ and the original
+        # signature, making pytest treat the drawn arguments as fixtures.
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        wrapper.__module__ = f.__module__
+        return wrapper
+
+    return deco

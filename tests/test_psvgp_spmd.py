@@ -20,6 +20,7 @@ _SCRIPT = textwrap.dedent(
     from repro.core.partition import make_grid, partition_data
     from repro.core import psvgp, svgp
     from repro.core.psvgp_spmd import make_spmd_step
+    from repro.runtime import compat
 
     ds = e3sm_like_field(n=2000, seed=0)
     grid = make_grid(ds.x, gx=4, gy=4)
@@ -39,7 +40,7 @@ _SCRIPT = textwrap.dedent(
     # below Adam's chaotic divergence horizon (the sqrt(nu) normalization
     # amplifies float-reassociation noise exponentially across steps; step-0
     # agreement is ~1e-9, step-4 would be ~1e-3 with identical math).
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         for _ in range(2):
             st_spmd, loss_spmd = step(
                 st_spmd, key, data.x, data.y, data.mask,
@@ -51,8 +52,14 @@ _SCRIPT = textwrap.dedent(
 
     a = jax.device_get(st_spmd.params)
     b = jax.device_get(st_sim.params)
+    # atol covers two Adam steps of float-reassociation noise between the
+    # two independently compiled programs (see comment above): the noise is
+    # run-to-run nondeterministic on CPU (thread-level reduction order
+    # across the 16 virtual devices; measured 1e-5..7e-5 across runs) and
+    # each sqrt(nu)-normalized step multiplies it. A real exchange/weight
+    # bug shows up at 1e-1 scale (2 x lr sign flips), 3 orders above this.
     for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
-        np.testing.assert_allclose(la, lb, atol=1e-5)
+        np.testing.assert_allclose(la, lb, atol=2e-4)
 
     # the lowered SPMD program must actually contain a collective-permute —
     # the paper's decentralized p2p exchange on the ICI torus.

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
+    from _hypothesis_shim import given, settings, st
 
 from repro.core.neighbors import neighbor_table
 from repro.core.partition import make_grid

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
+    from _hypothesis_shim import given, settings, st
 
 from repro.checkpoint import load_train_state, save_train_state, save_pytree, load_pytree
 from repro.data.tokens import synthetic_token_batches

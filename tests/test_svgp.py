@@ -112,6 +112,34 @@ def test_predict_matches_exact_gp_with_full_inducing():
     np.testing.assert_allclose(np.asarray(var_s), np.asarray(var_e), atol=0.05)
 
 
+def test_init_inducing_sampled_from_valid_rows_only():
+    """Regression: with a validity mask, inducing init must never draw the
+    padded rows (they replicate the partition's first point, stacking
+    duplicate inducing points there — singular-to-jitter Kmm, chaotic
+    Cholesky gradients) and must not duplicate rows when enough valid
+    points exist."""
+    key = jax.random.PRNGKey(0)
+    x_valid = jax.random.uniform(key, (12, 2))
+    # padded-storage layout of core.partition: pad slots replicate row 0
+    x_pad = jnp.concatenate([x_valid, jnp.broadcast_to(x_valid[0], (20, 2))])
+    mask = jnp.concatenate([jnp.ones(12), jnp.zeros(20)])
+    cfg = svgp.SVGPConfig(num_inducing=8, input_dim=2)
+    for seed in range(5):
+        params = svgp.init_svgp_params(jax.random.PRNGKey(seed), cfg, x_init=x_pad, mask=mask)
+        z = np.asarray(params.z)
+        valid = np.asarray(x_valid)
+        for row in z:
+            assert np.isclose(valid, row[None], atol=0).all(axis=1).any(), row
+        assert len(np.unique(z, axis=0)) == cfg.num_inducing  # no duplicates
+    # under vmap (the PSVGP init path) the same property must hold
+    xb = jnp.stack([x_pad, x_pad])
+    mb = jnp.stack([mask, mask])
+    keys = jax.random.split(jax.random.PRNGKey(9), 2)
+    pb = jax.vmap(lambda k, x, m: svgp.init_svgp_params(k, cfg, x_init=x, mask=m))(keys, xb, mb)
+    for z in np.asarray(pb.z):
+        assert len(np.unique(z, axis=0)) == cfg.num_inducing
+
+
 def test_whitened_unwhitened_same_objective_at_init():
     """At S=I, m=0 the two parameterizations give the same ELBO value."""
     key = jax.random.PRNGKey(9)
