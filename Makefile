@@ -1,0 +1,19 @@
+# Convenience lanes (the repo runs from source: PYTHONPATH=src).
+PY := PYTHONPATH=src python
+
+.PHONY: test test-full docs-check bench-predict bench-serve
+
+test:            ## tier-1: default lane (skips the slow marker)
+	$(PY) -m pytest -x -q
+
+test-full:       ## everything, including the slow SPMD/dry-run lane
+	$(PY) -m pytest -q -m "slow or not slow"
+
+docs-check:      ## README + docs/ commands and snippets must run as written
+	$(PY) -m pytest -q -m docs
+
+bench-predict:   ## cached-prediction speedup report -> BENCH_predict.json
+	$(PY) -m benchmarks.bench_predict
+
+bench-serve:     ## replicated-vs-sharded serving SLO report -> BENCH_serve.json
+	$(PY) -m benchmarks.bench_serve

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import psvgp, svgp
-from repro.core.blend import _corner_ids_weights, predict_blended
+from repro.core.blend import corner_ids_weights, predict_blended
 from repro.core.partition import make_grid, partition_data
 from repro.data.spatial import e3sm_like_field
 
@@ -34,7 +34,7 @@ def _predict_blended_seed(static, state, grid, points) -> Tuple[jnp.ndarray, jnp
     """The seed implementation, verbatim: per-point svgp.predict closure —
     one Kmm Cholesky per point per corner (the baseline being replaced)."""
     pts = np.asarray(points, np.float32)
-    ids, w = _corner_ids_weights(grid, pts)
+    ids, w = corner_ids_weights(grid, pts)
     ids = jnp.asarray(ids)
     w = jnp.asarray(w)
     scfg = static.cfg.svgp

@@ -1,0 +1,155 @@
+"""Serving SLO benchmark — replicated vs sharded PosteriorCache.
+
+Trains one PSVGP on the synthetic E3SM-like field, then serves the same
+request stream twice:
+
+  * replicated — ``blend.predict_blended`` against the full cache on one
+    device (the ``launch/serve.py --gp`` path);
+  * sharded — the distributed endpoint of ``launch/serve_sharded``: cache
+    factors one-partition-per-device over a gy x gx mesh, queries routed by
+    ``core/routing``, corners resolved with the 1-hop ppermute halo.
+    Sharded latency INCLUDES host-side routing + result scatter.
+
+Reports p50/p95/p99 request latency and points/s throughput for both
+paths, the sharded-vs-replicated allclose gate (atol 1e-5), and per-device
+cache-factor memory (sharded must be ~1/P of replicated). Default shapes
+are the ROADMAP's 16x16 dry-run mesh — 256 VIRTUAL host devices
+time-slicing this CPU, so sharded wall-clock is an upper bound (every
+"device" shares one socket); the equivalence, memory, and report structure
+are the deliverable, the absolute numbers become meaningful on a real
+mesh.
+
+  PYTHONPATH=src python -m benchmarks.bench_serve           # emits BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.bench_serve --quick   # CI-sized (4x4 mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+
+def run(
+    *,
+    grid_side: int = 16,
+    m: int = 8,
+    n_train: int = 20_000,
+    train_iters: int = 400,
+    batch: int = 2048,
+    requests: int = 32,
+    out_path: str = "BENCH_serve.json",
+) -> dict:
+    # virtual devices must be forced before any jax computation
+    from repro.launch import serve_sharded as ss
+
+    ss.ensure_host_devices(grid_side * grid_side)
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import psvgp, routing
+    from repro.core.blend import predict_blended
+
+    print(f"# bench_serve: grid={grid_side}x{grid_side} m={m} B={batch} "
+          f"requests={requests} backend={jax.default_backend()}")
+    # ONE shared recipe with the serving drivers, so the equivalence gate
+    # compares the same posterior both paths serve. The allclose gate needs
+    # a CONVERGED posterior (same reason as bench_predict: near init the
+    # f32 variance path is a large cancellation on both sides).
+    ds, grid, data, static, state = ss.train_demo_surface(
+        seed=0, n=n_train, grid_side=grid_side, m=m, train_iters=train_iters,
+    )
+    cache = psvgp.posterior_cache(static, state)
+    jax.block_until_ready(cache)
+
+    rng = np.random.default_rng(1)
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+    batches = [
+        rng.uniform(lo, hi, (batch, 2)).astype(np.float32) for _ in range(requests)
+    ]
+
+    # ---- replicated path --------------------------------------------------
+    def rep_answer(q):
+        out = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
+        jax.block_until_ready(out)
+        return out
+
+    pct_rep, qps_rep = ss.timed_request_loop(rep_answer, batches)
+
+    # ---- sharded path -----------------------------------------------------
+    mesh = ss.mesh_for_grid(grid)
+    cache_sh = ss.shard_cache(cache, mesh)
+    jax.block_until_ready(cache_sh)
+    total_b, device_b = ss.cache_memory_bytes(cache_sh)
+    blend_fn = ss.make_sharded_blend(
+        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh,
+        use_pallas=(jax.default_backend() == "tpu"),
+    )
+    q_max = ss.fixed_q_max(grid, batches)
+
+    def sh_answer(q):
+        table = routing.build_routing_table(grid, q, q_max=q_max)
+        xq, cs, cw = ss.shard_table(table, mesh)
+        mean, var = blend_fn(cache_sh, xq, cs, cw)
+        jax.block_until_ready((mean, var))
+        return (
+            routing.scatter_results(table, np.asarray(mean)),
+            routing.scatter_results(table, np.asarray(var)),
+        )
+
+    m_sh, v_sh = sh_answer(batches[0])  # warmup / compile + equivalence gate
+    m_rep, v_rep = rep_answer(batches[0])
+    mean_err = float(np.abs(m_sh - np.asarray(m_rep)).max())
+    var_err = float(np.abs(v_sh - np.asarray(v_rep)).max())
+
+    # equivalence check above already compiled + warmed the sharded path
+    pct_sh, qps_sh = ss.timed_request_loop(sh_answer, batches, warm=False)
+
+    rec = {
+        "P": grid.num_partitions,
+        "m": m,
+        "grid": f"{grid_side}x{grid_side}",
+        "mesh_devices": mesh.size,
+        "backend": jax.default_backend(),
+        "batch": batch,
+        "requests": requests,
+        "q_max": q_max,
+        "replicated": {
+            **pct_rep,
+            "points_per_s": qps_rep,
+            "cache_bytes_per_device": total_b,
+        },
+        "sharded": {
+            **pct_sh,
+            "points_per_s": qps_sh,
+            "cache_bytes_per_device": device_b,
+            "cache_shard_ratio": total_b / max(device_b, 1),
+        },
+        "equivalence": {
+            "max_abs_err_mean": mean_err,
+            "max_abs_err_var": var_err,
+            "atol_1e5_ok": bool(mean_err <= 1e-5 and var_err <= 1e-5),
+        },
+    }
+    print(json.dumps(rec, indent=2))
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=2)
+    print(f"wrote {out_path}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="CI-sized shapes (4x4 mesh)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    if args.quick:
+        run(grid_side=4, m=6, n_train=4000, train_iters=200, batch=512,
+            requests=10, out_path=args.out)
+    else:
+        run(out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

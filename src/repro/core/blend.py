@@ -39,8 +39,32 @@ from repro.core.partition import PartitionGrid
 from repro.core.psvgp import PSVGPState, PSVGPStatic, posterior_cache
 
 
-def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
-    """For each point: 4 surrounding partition ids + bilinear weights."""
+def corner_ids_weights(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """The 4 surrounding partition models of each point + bilinear weights.
+
+    This is the geometric core of both the blended predictor below and the
+    distributed query router (``repro.core.routing``): a point x is blended
+    from the (up to) four partitions whose CELL CENTERS surround it.
+
+    Args:
+      grid: the partition grid topology.
+      pts: (N, 2) query coordinates (host numpy; routing is host-side).
+
+    Returns:
+      ids (N, 4) int64: flat partition ids of the corner models, ordered
+        [lower-left, lower-right, upper-left, upper-right] in cell-center
+        coordinates. At domain edges the out-of-grid corners are CLIPPED
+        onto the boundary cells, so ids may repeat within a row — the
+        bilinear weights of clipped duplicates are consistent (they sum to
+        the same total mass; the blend degenerates to linear/nearest at
+        edges by construction).
+      w (N, 4) float32: bilinear weights, >= 0, summing to 1 per row.
+
+    Every corner id is always within one grid step (including diagonals) of
+    the cell that OWNS the point — the invariant that lets distributed
+    serving resolve corners with a 1-hop halo exchange (see
+    ``repro.core.routing.halo_ids``).
+    """
     xe, ye = grid.x_edges, grid.y_edges
     cw = xe[1] - xe[0]
     ch = ye[1] - ye[0]
@@ -66,6 +90,18 @@ def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
         [(1 - fx) * (1 - fy), fx * (1 - fy), (1 - fx) * fy, fx * fy], axis=1
     ).astype(np.float32)
     return ids, w
+
+
+def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
+    """Deprecated alias of :func:`corner_ids_weights` (pre-PR-2 private name)."""
+    import warnings
+
+    warnings.warn(
+        "blend._corner_ids_weights is deprecated; use blend.corner_ids_weights",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return corner_ids_weights(grid, pts)
 
 
 @functools.partial(jax.jit, static_argnames=("cov_fn",))
@@ -104,13 +140,26 @@ def predict_blended(
     points: jnp.ndarray,
     cache: posterior.PosteriorCache | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Continuous stitched prediction at arbitrary points (N, 2).
+    """Continuous stitched prediction at arbitrary points.
 
-    Pass a precomputed ``cache`` (``psvgp.posterior_cache``) when issuing
-    repeated query batches against one trained state — the serving loop in
-    ``repro.launch.serve --gp`` does exactly that."""
+    Args:
+      static / state: the trained PSVGP bundle (``psvgp.build`` / ``fit``).
+      grid: partition grid the state was trained on.
+      points: (N, 2) query coordinates (any array-like; moved to host).
+      cache: optional precomputed ``psvgp.posterior_cache``. Pass it when
+        issuing repeated query batches against one trained state — the
+        serving loop in ``repro.launch.serve --gp`` does exactly that.
+
+    Returns:
+      (mean (N,), var (N,)): the bilinear 4-corner blend of the local
+      posteriors. var >= 1e-12 (clamped), WITHOUT observation noise.
+
+    This is the replicated serving path: the full cache is resident on the
+    calling host. The sharded multi-host equivalent (same math, cache
+    factors partitioned over a device mesh) is
+    ``repro.launch.serve_sharded``."""
     pts = np.asarray(points, np.float32)
-    ids, w = _corner_ids_weights(grid, pts)
+    ids, w = corner_ids_weights(grid, pts)
     if cache is None:
         cache = posterior_cache(static, state)
     return _blend_eval(cache, static.cov_fn, jnp.asarray(pts), jnp.asarray(ids), jnp.asarray(w))

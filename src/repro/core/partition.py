@@ -89,6 +89,20 @@ def make_grid(
     )
 
 
+def cell_indices(grid: PartitionGrid, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(ix, iy) owning grid cell of each point in x (N, 2), int64.
+
+    The ONE binning rule shared by training-time partitioning
+    (``partition_data``) and serving-time query routing
+    (``repro.core.routing.owning_cells``) — they must agree, or routed
+    queries land on devices that never trained on their region.
+    Out-of-domain points clip to the edge cells.
+    """
+    ix = np.clip(np.searchsorted(grid.x_edges, x[:, 0], side="right") - 1, 0, grid.gx - 1)
+    iy = np.clip(np.searchsorted(grid.y_edges, x[:, 1], side="right") - 1, 0, grid.gy - 1)
+    return ix.astype(np.int64), iy.astype(np.int64)
+
+
 def partition_data(
     x: np.ndarray,
     y: np.ndarray,
@@ -103,8 +117,7 @@ def partition_data(
     x = np.asarray(x, np.float32)
     y = np.asarray(y, np.float32)
     n, d = x.shape
-    ix = np.clip(np.searchsorted(grid.x_edges, x[:, 0], side="right") - 1, 0, grid.gx - 1)
-    iy = np.clip(np.searchsorted(grid.y_edges, x[:, 1], side="right") - 1, 0, grid.gy - 1)
+    ix, iy = cell_indices(grid, x)
     part = iy * grid.gx + ix
     p_count = np.bincount(part, minlength=grid.num_partitions)
     nm = int(p_count.max()) if n_max is None else n_max

@@ -169,7 +169,17 @@ def build_cache_stacked(
     whitened: bool = False,
 ) -> PosteriorCache:
     """vmap of ``build_cache`` over a leading partition axis — one batched
-    O(P m^3) factorization for the whole partitioned model."""
+    O(P m^3) factorization for the whole partitioned model.
+
+    Args:
+      params: SVGPParams-like pytree whose every leaf has a leading (P, ...)
+        partition axis (``psvgp.PSVGPState.params``).
+      cov_fn / jitter / whitened: as in ``build_cache``.
+
+    Returns a ``PosteriorCache`` with leaves z (P, m, d), w/u (P, m, m),
+    c (P, m), cov (P, d)/(P,), log_beta (P,). The leading axis is what the
+    sharded serving path partitions one-per-device over the mesh
+    (``sharding.gp_stacked_pspecs`` / ``launch.serve_sharded``)."""
     return jax.vmap(
         lambda p: build_cache(p, cov_fn, jitter=jitter, whitened=whitened)
     )(params)
@@ -183,7 +193,15 @@ def predict_cached_stacked(
     include_noise: bool = False,
     use_pallas: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Each stacked model predicts at its own rows of xstar (P, Q, d)."""
+    """Each stacked model predicts at its own rows of xstar.
+
+    Args:
+      cache: P-stacked ``PosteriorCache`` (``build_cache_stacked``).
+      cov_fn: covariance function (``repro.gp.covariances``).
+      xstar: (P, Q, d) — model p sees only row p's Q query points.
+      include_noise / use_pallas: as in ``predict_cached``.
+
+    Returns (fmean (P, Q), fvar (P, Q)); fvar clamped to >= 1e-12."""
     return jax.vmap(
         lambda ca, xq: predict_cached(
             ca, cov_fn, xq, include_noise=include_noise, use_pallas=use_pallas
@@ -192,5 +210,11 @@ def predict_cached_stacked(
 
 
 def take_cache(cache: PosteriorCache, ids: jnp.ndarray) -> PosteriorCache:
-    """Gather stacked cache rows (e.g. one per query point or edge)."""
+    """Gather stacked cache rows (e.g. one per query point or edge).
+
+    ``ids`` is any int array; leaf p-axes are indexed by it, so the result
+    stacks cache ids.shape[0] times (duplicates allowed — the blend path
+    gathers one row per query per corner). The sharded serving path never
+    calls this on the factors (that would be the all-gather it exists to
+    avoid); it is the replicated path's tool."""
     return jax.tree.map(lambda a: jnp.take(a, ids, axis=0), cache)

@@ -46,11 +46,18 @@ def grid_matches_mesh(grid: PartitionGrid, mesh: Mesh, axes: Sequence[str]) -> b
     return grid.gx == gx and grid.gy == gy
 
 
-def _shift_perm(n: int, up: bool) -> list[tuple[int, int]]:
-    """(src, dst) pairs for 'receive from index+1' (up) or 'index-1'."""
+def shift_perm(n: int, up: bool) -> list[tuple[int, int]]:
+    """(src, dst) ppermute pairs for 'receive from index+1' (up) or
+    'index-1'; edge devices receive nothing (ppermute zero-fills them).
+
+    Public API: the serving halo exchange (``repro.launch.serve_sharded``)
+    builds its 3x3 neighborhood from the same permutation tables the
+    training exchange uses, which is what keeps the two communication
+    patterns provably identical."""
     if up:
         return [(i + 1, i) for i in range(n - 1)]
     return [(i - 1, i) for i in range(1, n)]
+
 
 
 def make_spmd_step(
@@ -98,21 +105,21 @@ def make_spmd_step(
 
         def east(p):
             return jax.tree.map(
-                lambda a: jax.lax.ppermute(a, col_axis, _shift_perm(gx, up=True)), p
+                lambda a: jax.lax.ppermute(a, col_axis, shift_perm(gx, up=True)), p
             )
 
         def west(p):
             return jax.tree.map(
-                lambda a: jax.lax.ppermute(a, col_axis, _shift_perm(gx, up=False)), p
+                lambda a: jax.lax.ppermute(a, col_axis, shift_perm(gx, up=False)), p
             )
 
         def north(p):
             ax = row_axes if len(row_axes) > 1 else row_axes[0]
-            return jax.tree.map(lambda a: jax.lax.ppermute(a, ax, _shift_perm(gy, up=True)), p)
+            return jax.tree.map(lambda a: jax.lax.ppermute(a, ax, shift_perm(gy, up=True)), p)
 
         def south(p):
             ax = row_axes if len(row_axes) > 1 else row_axes[0]
-            return jax.tree.map(lambda a: jax.lax.ppermute(a, ax, _shift_perm(gy, up=False)), p)
+            return jax.tree.map(lambda a: jax.lax.ppermute(a, ax, shift_perm(gy, up=False)), p)
 
         return jax.lax.switch(d, (self_, east, west, north, south), payload)
 

@@ -1,0 +1,272 @@
+"""Query routing for distributed PSVGP serving (the sharded-cache path).
+
+The paper's serving claim is the same as its training claim: a partition's
+model only ever needs ONE-HOP information. For prediction that hop is the
+blend stencil — ``blend.corner_ids_weights`` assigns every query point the
+(up to) 4 partition models whose cell centers surround it, and each of
+those corners is always within one grid step (including diagonals) of the
+cell that OWNS the point. So when the ``PosteriorCache`` is sharded one
+partition per device, a query never needs factors from outside the owning
+device's 3x3 neighborhood — corner resolution is a halo exchange, exactly
+like the training-time mini-batch ``ppermute`` (Katzfuss & Hammerling 2016
+and Peruzzi et al. 2020 exploit the same locality for distributed
+partitioned prediction).
+
+This module is the HOST-SIDE half of that design: given a raw query batch
+it builds a :class:`RoutingTable` — per-partition padded/masked query
+blocks with jit-stable shapes, each query carrying its 4 corner blend
+weights and the corner models encoded as 3x3-halo SLOTS (offsets relative
+to the owning cell) rather than global partition ids. Slots are what make
+the device program mesh-local: slot k on device p always means "the model
+at grid offset ``OFFSETS[k]`` from p", whichever device that is.
+
+The device-side half — the shard_map program that halo-exchanges the query
+blocks, evaluates every device's local cached posterior, returns results,
+and blends — lives in ``repro.launch.serve_sharded``.
+:func:`predict_routed` below is its single-host reference implementation
+(identical math, gathers instead of collectives), used by the equivalence
+tests and as a fallback when no mesh is available.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import posterior
+from repro.core.blend import corner_ids_weights
+from repro.core.partition import PartitionGrid, cell_indices
+
+# 3x3 halo slot layout, row-major over (dy, dx) in {-1, 0, +1}^2:
+# slot k <-> offset (dx, dy) = (k % 3 - 1, k // 3 - 1); slot 4 is self.
+# The reverse slot (offset negated) is 8 - k.
+OFFSETS: Tuple[Tuple[int, int], ...] = tuple(
+    (dx, dy) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
+)
+SELF_SLOT = 4
+NUM_HALO_SLOTS = 9
+
+
+class RoutingTable(NamedTuple):
+    """Per-partition routed query blocks (host numpy; leading axis = P).
+
+    All arrays are padded to a common ``q_max`` so the device program is
+    jit-stable across request batches of varying size/skew (q_max itself
+    recompiles only when a batch overflows the previous high-water mark).
+
+    Fields:
+      xq          (P, q_max, 2) float32: queries owned by each partition.
+        Padded rows hold the cell CENTER (an in-domain point, so the
+        covariance stays well-conditioned); the mask keeps them out of
+        every result.
+      qmask       (P, q_max) float32 {0,1}: row validity.
+      corner_slot (P, q_max, 4) int32 in [0, 9): each query's 4 corner
+        models as 3x3-halo slots relative to the owning partition
+        (see OFFSETS). Padded rows point at SELF_SLOT.
+      corner_w    (P, q_max, 4) float32: bilinear blend weights (sum to 1
+        on valid rows, all-zero on padded rows).
+      src_idx     (P, q_max) int32: original index of each routed query in
+        the request batch (0 on padded rows) — the scatter map back.
+      counts      (P,) int32: true number of queries owned per partition.
+    """
+
+    xq: np.ndarray
+    qmask: np.ndarray
+    corner_slot: np.ndarray
+    corner_w: np.ndarray
+    src_idx: np.ndarray
+    counts: np.ndarray
+
+    @property
+    def num_partitions(self) -> int:
+        return self.xq.shape[0]
+
+    @property
+    def q_max(self) -> int:
+        return self.xq.shape[1]
+
+    @property
+    def num_queries(self) -> int:
+        return int(self.counts.sum())
+
+
+def owning_cells(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """(ix, iy) grid cell owning each point — delegates to the SAME binning
+    ``partition.partition_data`` uses (``partition.cell_indices``), so a
+    routed query always lands on the device that trained on its region."""
+    return cell_indices(grid, pts)
+
+
+def ceil_to(n: int, k: int) -> int:
+    """n rounded up to a multiple of k (shared q_max/pad alignment rule)."""
+    return ((n + k - 1) // k) * k
+
+
+def halo_ids(grid: PartitionGrid) -> np.ndarray:
+    """(P, 9) int32: partition id at each 3x3-halo slot of every partition
+    (own id where the neighbor is off-grid — those slots are never selected
+    by a corner, since clipped corners stay inside the grid)."""
+    P = grid.num_partitions
+    ids = np.empty((P, NUM_HALO_SLOTS), np.int32)
+    for p in range(P):
+        ix, iy = grid.cell_of(p)
+        for k, (dx, dy) in enumerate(OFFSETS):
+            jx, jy = ix + dx, iy + dy
+            inside = 0 <= jx < grid.gx and 0 <= jy < grid.gy
+            ids[p, k] = grid.index_of(jx, jy) if inside else p
+    return ids
+
+
+def build_routing_table(
+    grid: PartitionGrid,
+    points: np.ndarray,
+    *,
+    q_max: int | None = None,
+    pad_multiple: int = 8,
+) -> RoutingTable:
+    """Bucket a query batch by owning partition into padded device blocks.
+
+    Args:
+      grid: the partition grid (must match the sharded cache's grid).
+      points: (N, 2) query coordinates.
+      q_max: fixed per-partition block size; default = the batch's max
+        bucket count rounded up to ``pad_multiple``. Raises ValueError if a
+        bucket overflows an explicit q_max — routing must never silently
+        drop queries.
+      pad_multiple: round q_max up to this (TPU sublane alignment).
+
+    Returns a :class:`RoutingTable` (see its docstring for shapes).
+    """
+    pts = np.asarray(points, np.float32)
+    if pts.ndim != 2 or pts.shape[1] != 2:
+        raise ValueError(f"points must be (N, 2), got {pts.shape}")
+    n = pts.shape[0]
+    P = grid.num_partitions
+
+    ix, iy = owning_cells(grid, pts)
+    own = iy * grid.gx + ix  # (N,) flat owning partition
+    ids, w = corner_ids_weights(grid, pts)  # (N, 4), (N, 4)
+    dx = ids % grid.gx - ix[:, None]  # (N, 4) in {-1, 0, 1}
+    dy = ids // grid.gx - iy[:, None]
+    slot = ((dy + 1) * 3 + (dx + 1)).astype(np.int32)
+
+    counts = np.bincount(own, minlength=P).astype(np.int32)
+    need = int(counts.max()) if n else 0
+    if q_max is None:
+        qm = max(need, 1)
+    elif need > q_max:
+        raise ValueError(
+            f"partition bucket of {need} queries overflows q_max={q_max}; "
+            "routing never drops queries — raise q_max or split the batch"
+        )
+    else:
+        qm = q_max
+    qm = ceil_to(qm, pad_multiple)
+
+    # stable bucket fill, vectorized: position of each query within its
+    # owning partition's block = rank among same-owner queries.
+    order = np.argsort(own, kind="stable")
+    sorted_own = own[order]
+    pos = np.arange(n) - np.searchsorted(sorted_own, sorted_own)
+
+    # padded rows: cell centers (valid covariance inputs, masked on output)
+    cx = 0.5 * (grid.x_edges[:-1] + grid.x_edges[1:])
+    cy = 0.5 * (grid.y_edges[:-1] + grid.y_edges[1:])
+    centers = np.stack(np.meshgrid(cx, cy), axis=-1).reshape(P, 2).astype(np.float32)
+
+    xq = np.broadcast_to(centers[:, None, :], (P, qm, 2)).copy()
+    qmask = np.zeros((P, qm), np.float32)
+    corner_slot = np.full((P, qm, 4), SELF_SLOT, np.int32)
+    corner_w = np.zeros((P, qm, 4), np.float32)
+    src_idx = np.zeros((P, qm), np.int32)
+
+    xq[sorted_own, pos] = pts[order]
+    qmask[sorted_own, pos] = 1.0
+    corner_slot[sorted_own, pos] = slot[order]
+    corner_w[sorted_own, pos] = w[order]
+    src_idx[sorted_own, pos] = order.astype(np.int32)
+
+    return RoutingTable(
+        xq=xq, qmask=qmask, corner_slot=corner_slot, corner_w=corner_w,
+        src_idx=src_idx, counts=counts,
+    )
+
+
+def scatter_results(table: RoutingTable, values: np.ndarray) -> np.ndarray:
+    """Reassemble per-partition padded results into request order.
+
+    ``values`` is (P, q_max) (or (P, q_max, ...)); returns (N, ...) with N =
+    ``table.num_queries``, inverting the routing permutation.
+    """
+    values = np.asarray(values)
+    out = np.empty((table.num_queries,) + values.shape[2:], values.dtype)
+    valid = table.qmask > 0
+    out[table.src_idx[valid]] = values[valid]
+    return out
+
+
+def blend_slots(
+    res_mean: jnp.ndarray,
+    res_var: jnp.ndarray,
+    corner_slot: jnp.ndarray,
+    corner_w: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Resolve per-slot evaluations into the 4-corner bilinear blend.
+
+    Args:
+      res_mean / res_var: (9, q) — the halo-resolved evaluations of ONE
+        partition's q queries: slot k holds the prediction of the model at
+        grid offset OFFSETS[k] from the owner.
+      corner_slot: (q, 4) int32 slot index of each query's 4 corners.
+      corner_w: (q, 4) bilinear weights.
+
+    Returns (mean (q,), var (q,)) — same mixture formula as
+    ``blend.predict_blended``: var is the blend of second moments minus the
+    blended mean squared, clamped to >= 1e-12.
+    """
+    m_c = jnp.take_along_axis(res_mean, corner_slot.T, axis=0).T  # (q, 4)
+    v_c = jnp.take_along_axis(res_var, corner_slot.T, axis=0).T
+    mean = jnp.sum(corner_w * m_c, axis=1)
+    second = jnp.sum(corner_w * (v_c + m_c**2), axis=1)
+    var = jnp.maximum(second - mean**2, 1e-12)
+    return mean, var
+
+
+def predict_routed(
+    cache: posterior.PosteriorCache,
+    cov_fn: Callable,
+    grid: PartitionGrid,
+    table: RoutingTable,
+    *,
+    use_pallas: bool = False,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Single-host reference of the sharded serving program (same math).
+
+    For every partition p and halo slot k, evaluates the model at
+    ``halo_ids(grid)[p, k]`` on p's routed queries, then blends via
+    :func:`blend_slots` — exactly what the shard_map program in
+    ``repro.launch.serve_sharded`` computes with ``ppermute`` halo
+    exchanges instead of gathers. Returns (mean (N,), var (N,)) in request
+    order.
+    """
+    hids = jnp.asarray(halo_ids(grid))  # (P, 9)
+    xq = jnp.asarray(table.xq)
+
+    def eval_slot(k):
+        cache_k = posterior.take_cache(cache, hids[:, k])  # leaves (P, ...)
+        return posterior.predict_cached_stacked(
+            cache_k, cov_fn, xq, use_pallas=use_pallas
+        )
+
+    res = [eval_slot(k) for k in range(NUM_HALO_SLOTS)]
+    res_mean = jnp.stack([m for m, _ in res], axis=1)  # (P, 9, q)
+    res_var = jnp.stack([v for _, v in res], axis=1)
+    mean, var = jax.vmap(blend_slots)(
+        res_mean, res_var, jnp.asarray(table.corner_slot), jnp.asarray(table.corner_w)
+    )
+    return (
+        scatter_results(table, np.asarray(mean)),
+        scatter_results(table, np.asarray(var)),
+    )

@@ -14,10 +14,12 @@ import jax.numpy as jnp
 _LOG2PI = 1.8378770664093453
 
 # 20-point Gauss-Hermite rule (physicists' convention), precomputed with
-# numpy so no scipy dependency is needed at runtime.
+# numpy so no scipy dependency is needed at runtime. Kept as HOST arrays:
+# converting at import time would initialize the jax backend, and the repo
+# contract (see repro.launch.mesh) is that imports never touch device state
+# — the sharded serving / dry-run entry points must still be able to force
+# the virtual device count after modules are imported.
 _GH_X, _GH_W = np.polynomial.hermite.hermgauss(20)
-_GH_X = jnp.asarray(_GH_X)
-_GH_W = jnp.asarray(_GH_W)
 _INV_SQRT_PI = 1.0 / np.sqrt(np.pi)
 
 
@@ -59,8 +61,8 @@ def poisson_expected_loglik(y, fmean, fvar, log_beta=None):
 
 def poisson_expected_loglik_quadrature(y, fmean, fvar):
     """Quadrature version used only in tests to validate the closed form."""
-    f = fmean[..., None] + jnp.sqrt(2.0 * fvar)[..., None] * _GH_X  # (..., Q)
+    f = fmean[..., None] + jnp.sqrt(2.0 * fvar)[..., None] * jnp.asarray(_GH_X)  # (..., Q)
     from jax.scipy.special import gammaln
 
     logp = y[..., None] * f - jnp.exp(f) - gammaln(y + 1.0)[..., None]
-    return _INV_SQRT_PI * jnp.sum(_GH_W * logp, axis=-1)
+    return _INV_SQRT_PI * jnp.sum(jnp.asarray(_GH_W) * logp, axis=-1)

@@ -13,6 +13,16 @@ against the cached factors with a latency/throughput report:
   PYTHONPATH=src python -m repro.launch.serve --gp \
       --gp-grid 8 --gp-m 10 --gp-train-iters 200 \
       --gp-batch 2048 --gp-requests 50
+
+``--sharded`` switches the GP mode from the replicated cache to the
+distributed endpoint (``repro.launch.serve_sharded``): the PosteriorCache
+is sharded one partition per device over a gy x gx mesh, queries are
+routed to their owning partition, and corner blending is resolved with a
+1-hop ppermute halo exchange. Needs gp-grid^2 devices — on CPU they are
+forced as virtual host devices, which must happen before jax initializes,
+so --sharded is handled before any other jax work:
+
+  PYTHONPATH=src python -m repro.launch.serve --gp --sharded --gp-grid 8
 """
 from __future__ import annotations
 
@@ -29,25 +39,14 @@ from repro.runtime.steps import init_train_state, make_decode_step, make_prefill
 
 def serve_gp(args) -> None:
     """Batched query loop over the blended PSVGP surface (cached factors)."""
-    from repro.core import psvgp, svgp
+    from repro.core import psvgp
     from repro.core.blend import predict_blended
-    from repro.core.partition import make_grid, partition_data
-    from repro.data.spatial import e3sm_like_field
+    from repro.launch.serve_sharded import train_demo_surface
 
-    ds = e3sm_like_field(n=args.gp_n, seed=args.seed)
-    grid = make_grid(ds.x, args.gp_grid, args.gp_grid)
-    data = partition_data(ds.x, ds.y, grid)
-    cfg = psvgp.PSVGPConfig(
-        svgp=svgp.SVGPConfig(num_inducing=args.gp_m, input_dim=2),
-        delta=0.25, batch_size=32, learning_rate=0.05,
+    ds, grid, data, static, state = train_demo_surface(
+        seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
+        m=args.gp_m, train_iters=args.gp_train_iters,
     )
-    static = psvgp.build(cfg, data)
-    state = psvgp.init(jax.random.PRNGKey(args.seed), cfg, data)
-    t0 = time.time()
-    state = psvgp.fit(static, state, data, args.gp_train_iters)
-    jax.block_until_ready(state.params)
-    print(f"trained P={grid.num_partitions} partitions, m={args.gp_m}, "
-          f"{args.gp_train_iters} iters in {time.time()-t0:.1f} s")
 
     t0 = time.time()
     cache = psvgp.posterior_cache(static, state)
@@ -64,23 +63,18 @@ def serve_gp(args) -> None:
         jnp.asarray(rng.uniform(lo, hi, (B, 2)).astype(np.float32))
         for _ in range(args.gp_requests)
     ]
-    # warmup compiles the fixed-shape query program
-    mean, var = predict_blended(static, state, grid, batches[0], cache=cache)
-    jax.block_until_ready((mean, var))
 
-    lat = []
-    t_all = time.time()
-    for q in batches:
-        t0 = time.time()
-        mean, var = predict_blended(static, state, grid, q, cache=cache)
-        jax.block_until_ready((mean, var))
-        lat.append(time.time() - t0)
-    wall = time.time() - t_all
-    lat_ms = np.sort(np.asarray(lat)) * 1e3
-    qps = args.gp_requests * B / wall
-    print(f"served {args.gp_requests} requests x {B} points in {wall:.2f} s")
-    print(f"latency/request ms: p50={np.percentile(lat_ms, 50):.2f} "
-          f"p90={np.percentile(lat_ms, 90):.2f} p99={np.percentile(lat_ms, 99):.2f}")
+    def answer(q):
+        out = predict_blended(static, state, grid, q, cache=cache)
+        jax.block_until_ready(out)
+        return out
+
+    from repro.launch.serve_sharded import timed_request_loop
+
+    pct, qps = timed_request_loop(answer, batches)
+    print(f"served {args.gp_requests} requests x {B} points")
+    print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
+          f"p95={pct['p95_ms']:.2f} p99={pct['p99_ms']:.2f}")
     print(f"throughput: {qps:,.0f} points/s")
 
 
@@ -94,18 +88,30 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--gp", action="store_true", help="serve the stitched PSVGP surface")
-    ap.add_argument("--gp-n", type=int, default=20_000, help="training observations")
-    ap.add_argument("--gp-grid", type=int, default=8, help="partition grid is gp-grid^2")
-    ap.add_argument("--gp-m", type=int, default=10, help="inducing points per partition")
-    ap.add_argument("--gp-train-iters", type=int, default=200)
-    ap.add_argument("--gp-batch", type=int, default=2048, help="query points per request")
-    ap.add_argument("--gp-requests", type=int, default=50)
+    ap.add_argument("--sharded", action="store_true",
+                    help="GP mode: serve from the mesh-sharded PosteriorCache "
+                         "(repro.launch.serve_sharded) instead of the replicated one")
+    # the --gp-* flags are owned by serve_sharded (one definition for both
+    # entry points); its import is device-state free, so the virtual-device
+    # setup of --sharded still works.
+    from repro.launch.serve_sharded import add_gp_args
+
+    add_gp_args(ap)
     args = ap.parse_args()
 
+    if args.sharded and not args.gp:
+        ap.error("--sharded only applies to the GP serving mode (add --gp)")
     if args.gp:
         if args.gp_requests < 1 or args.gp_batch < 1:
             ap.error("--gp-requests and --gp-batch must be >= 1")
-        serve_gp(args)
+        if args.sharded:
+            # imports and argparse above never initialize the jax backend,
+            # so serve_sharded can still force the virtual device count.
+            from repro.launch.serve_sharded import serve_sharded
+
+            serve_sharded(args)
+        else:
+            serve_gp(args)
         return
     if not args.arch:
         ap.error("--arch required (or --gp for the PSVGP surface)")

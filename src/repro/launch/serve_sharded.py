@@ -1,0 +1,464 @@
+"""Sharded multi-host GP serving — the distributed PosteriorCache endpoint.
+
+Replicated serving (``repro.launch.serve --gp``) answers every query from
+one host holding ALL P partitions' cached factors. This module completes
+the paper's story at serving time: the ``PosteriorCache`` is sharded one
+partition per device over the mesh (per-device factor memory = 1/P of
+replicated), queries are routed to their owning partition by
+``repro.core.routing``, and the 4-corner blend is resolved with a 1-hop
+``ppermute`` halo exchange — exactly the training-time communication
+pattern of ``repro.core.psvgp_spmd``, and NO all-gather of factors
+anywhere.
+
+Per request the device program does:
+
+  1. halo-exchange the routed query blocks: every device receives its 8
+     grid neighbors' (q_max, 2) query blocks (two ppermute rounds; the
+     blend stencil never reaches further — see ``routing.OFFSETS``),
+  2. evaluate the LOCAL cached posterior on all 9 blocks at once — one
+     batched ``posterior.predict_cached`` of (9*q_max, 2) points
+     (``use_pallas=True`` routes it through the fused Pallas prediction
+     kernel of ``repro.kernels.predict`` on TPU),
+  3. return each result block to the query's owner (the reverse halo:
+     slot k's result travels along offset k carrying the evaluation of the
+     slot 8-k block),
+  4. blend the 4 corner evaluations per query on the owning device
+     (``routing.blend_slots``).
+
+Communication per request per device: 8 query blocks out + 8 result pairs
+back — O(q_max) floats to nearest neighbors only, independent of P. The
+factors, like the variational parameters during training, never move.
+
+Usage (CPU dry-run; the grid is mapped one-partition-per-device onto
+gy x gx virtual host devices):
+
+  PYTHONPATH=src python -m repro.launch.serve_sharded \
+      --gp-grid 8 --gp-m 10 --gp-train-iters 200 \
+      --gp-batch 2048 --gp-requests 50
+
+or equivalently through the main serving driver:
+
+  PYTHONPATH=src python -m repro.launch.serve --gp --sharded --gp-grid 8
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import posterior, routing
+from repro.core.partition import PartitionGrid
+from repro.gp.covariances import CovarianceParams
+from repro.core.psvgp_spmd import grid_matches_mesh, shift_perm
+from repro.runtime import compat
+from repro.sharding import gp_stacked_pspecs
+
+
+def ensure_host_devices(n: int) -> None:
+    """Force >= n virtual host devices (must run before jax backend init).
+
+    The host-device-count flag is written into XLA_FLAGS unconditionally
+    (we cannot count devices without initializing the backend, and after
+    init it is too late to set it) — on a real TPU slice the flag is inert
+    for this process but IS inherited by child processes that run
+    CPU-backed jax. An already-present but too-small count is rewritten
+    upward (it only binds at backend init, so rewriting is still effective
+    here). Raises with guidance if the backend initialized too early for
+    the flag to take effect.
+    """
+    import re
+
+    flags = os.environ.get("XLA_FLAGS", "")
+    flag_re = r"--xla_force_host_platform_device_count=(\d+)"
+    m = re.search(flag_re, flags)
+    if m is None:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}"
+        ).strip()
+    elif int(m.group(1)) < n:
+        os.environ["XLA_FLAGS"] = re.sub(
+            flag_re, f"--xla_force_host_platform_device_count={n}", flags
+        )
+    if jax.device_count() < n:
+        raise RuntimeError(
+            f"need {n} devices for one-partition-per-device serving, have "
+            f"{jax.device_count()}. Set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} before jax "
+            "initializes (import order matters), or shrink --gp-grid."
+        )
+
+
+def mesh_for_grid(grid: PartitionGrid) -> Mesh:
+    """(gy, gx) device mesh matching the partition grid, axes (data, model)
+    — the serving analogue of the training mapping in
+    ``repro.core.psvgp_spmd`` (grid x-steps shift along ``model``, y-steps
+    along ``data``)."""
+    return compat.make_mesh((grid.gy, grid.gx), ("data", "model"))
+
+
+def shard_cache(
+    cache: posterior.PosteriorCache, mesh: Mesh
+) -> posterior.PosteriorCache:
+    """Place the P-stacked cache one partition per device (leading axis
+    over all mesh axes via ``sharding.gp_stacked_pspecs``)."""
+    specs = gp_stacked_pspecs(cache, mesh)
+    return jax.tree.map(
+        lambda leaf, spec: jax.device_put(leaf, NamedSharding(mesh, spec)),
+        cache, specs,
+    )
+
+
+def shard_table(table: routing.RoutingTable, mesh: Mesh):
+    """Device-place the routed query blocks a request actually ships:
+    (xq, corner_slot, corner_w), leading P axis over the mesh. qmask /
+    src_idx / counts stay host-side (they only drive the result scatter)."""
+    blocks = (
+        jnp.asarray(table.xq),
+        jnp.asarray(table.corner_slot),
+        jnp.asarray(table.corner_w),
+    )
+    specs = gp_stacked_pspecs(blocks, mesh)
+    return tuple(
+        jax.device_put(b, NamedSharding(mesh, s)) for b, s in zip(blocks, specs)
+    )
+
+
+def _make_shift(axes: Sequence[str], gx: int, gy: int) -> Callable:
+    """Build ``shift(tree, dx, dy)`` usable INSIDE a shard_map over ``axes``:
+    every device receives the payload of the device at grid offset
+    (dx, dy), zeros where that neighbor is off-grid (ppermute's edge
+    semantics — routing guarantees off-grid slots are never blended).
+    Diagonal offsets compose an x-hop and a y-hop; both are 1-hop
+    nearest-neighbor collectives on the ICI torus, exactly like the
+    training exchange in ``repro.core.psvgp_spmd``."""
+    col_axis = axes[-1]
+    row_axes = tuple(axes[:-1])
+    row_ax = row_axes if len(row_axes) > 1 else row_axes[0]
+
+    def shift(tree, dx: int, dy: int):
+        def sh(a):
+            if dx:
+                a = jax.lax.ppermute(a, col_axis, shift_perm(gx, up=(dx > 0)))
+            if dy:
+                a = jax.lax.ppermute(a, row_ax, shift_perm(gy, up=(dy > 0)))
+            return a
+
+        return jax.tree.map(sh, tree)
+
+    return shift
+
+
+def make_halo_gather(mesh: Mesh, axes: Sequence[str], grid: PartitionGrid):
+    """Jitted (P, ...) -> (P, 9, ...) halo gather: output slot k on device p
+    is device p+OFFSETS[k]'s block (zeros off-grid). The standalone probe
+    of the exchange step 1 uses in serving — tests assert it resolves
+    corners exactly like ``routing.halo_ids``."""
+    if not grid_matches_mesh(grid, mesh, axes):
+        raise ValueError(
+            f"grid {grid.gx}x{grid.gy} must match mesh axes {tuple(axes)}"
+        )
+    shift = _make_shift(axes, grid.gx, grid.gy)
+
+    def gather(x):
+        x = x[0]
+        out = [
+            x if k == routing.SELF_SLOT else shift(x, dx, dy)
+            for k, (dx, dy) in enumerate(routing.OFFSETS)
+        ]
+        return jnp.stack(out)[None]
+
+    pspec = P(tuple(axes))
+    return jax.jit(
+        compat.shard_map(
+            gather, mesh=mesh, in_specs=(pspec,), out_specs=pspec, check_vma=False
+        )
+    )
+
+
+def make_sharded_blend(
+    mesh: Mesh,
+    axes: Sequence[str],
+    grid: PartitionGrid,
+    cov_fn: Callable,
+    cache_like: posterior.PosteriorCache | None = None,
+    *,
+    use_pallas: bool = False,
+):
+    """Build the jitted shard_map serving program.
+
+    Call signature of the returned function (leading P axis of every array
+    sharded one partition per device):
+
+      blend_fn(cache, xq, corner_slot, corner_w) -> (mean, var)
+
+    with cache a P-stacked ``PosteriorCache``, xq (P, q_max, 2),
+    corner_slot (P, q_max, 4) int32, corner_w (P, q_max, 4), and outputs
+    (P, q_max) each — padded rows carry garbage (weight-0 blends) and are
+    dropped by ``routing.scatter_results``. Math identical to
+    ``routing.predict_routed`` and, through it, ``blend.predict_blended``.
+
+    ``cache_like``: the cache that will be served (only its pytree
+    STRUCTURE is read, to build the shard_map in_specs) — pass it whenever
+    available so a future PosteriorCache field cannot desync the spec
+    tree; defaults to the current field layout.
+    """
+    if not grid_matches_mesh(grid, mesh, axes):
+        raise ValueError(
+            f"grid {grid.gx}x{grid.gy} must match mesh axes {tuple(axes)} "
+            f"{[mesh.shape[a] for a in axes]} (one partition per device)"
+        )
+    if grid.wrap_x:
+        raise NotImplementedError("wrapped grids need ring perms for the halo")
+    shift = _make_shift(axes, grid.gx, grid.gy)
+
+    def step(cache, xq, corner_slot, corner_w):
+        local = jax.tree.map(lambda a: a[0], cache)  # this device's factors
+        x = xq[0]  # (q, d)
+        q, d = x.shape
+        # 1. halo in: slot k = queries owned by the device at offset k
+        halo = [
+            x if k == routing.SELF_SLOT else shift(x, dx, dy)
+            for k, (dx, dy) in enumerate(routing.OFFSETS)
+        ]
+        hx = jnp.stack(halo)  # (9, q, d)
+        # 2. one batched local evaluation of all nine blocks
+        mean, var = posterior.predict_cached(
+            local, cov_fn, hx.reshape(routing.NUM_HALO_SLOTS * q, d),
+            use_pallas=use_pallas,
+        )
+        mean = mean.reshape(routing.NUM_HALO_SLOTS, q)
+        var = var.reshape(routing.NUM_HALO_SLOTS, q)
+        # 3. halo out: this device's evaluation of the slot-(8-k) block
+        # travels along offset k, landing on the owner as "the model at
+        # offset k from me evaluated my queries".
+        res = []
+        for k, (dx, dy) in enumerate(routing.OFFSETS):
+            rk = routing.NUM_HALO_SLOTS - 1 - k  # reverse slot: -OFFSETS[k]
+            payload = (mean[rk], var[rk])
+            res.append(payload if k == routing.SELF_SLOT else shift(payload, dx, dy))
+        res_mean = jnp.stack([m for m, _ in res])  # (9, q)
+        res_var = jnp.stack([v for _, v in res])
+        # 4. 4-corner bilinear blend on the owning device
+        bmean, bvar = routing.blend_slots(res_mean, res_var, corner_slot[0], corner_w[0])
+        return bmean[None], bvar[None]
+
+    pspec = P(tuple(axes))
+    if cache_like is not None:
+        cache_specs = jax.tree.map(lambda _: pspec, cache_like)
+    else:
+        cache_specs = posterior.PosteriorCache(
+            z=pspec, w=pspec, u=pspec, c=pspec,
+            cov=CovarianceParams(log_lengthscale=pspec, log_variance=pspec),
+            log_beta=pspec,
+        )
+    step_fn = compat.shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(cache_specs, pspec, pspec, pspec),
+        out_specs=(pspec, pspec),
+        check_vma=False,
+    )
+    return jax.jit(step_fn)
+
+
+# --------------------------------------------------------------------------
+# Serving driver
+# --------------------------------------------------------------------------
+
+
+def train_demo_surface(
+    *, seed: int, n: int, grid_side: int, m: int, train_iters: int
+):
+    """The ONE training recipe every serving driver/benchmark demos against
+    (``serve --gp``, ``serve --gp --sharded``, ``benchmarks.bench_serve``):
+    a PSVGP with the paper-flavored delta=0.25 on the synthetic E3SM-like
+    field. Keeping it shared is what makes the replicated-vs-sharded
+    equivalence checks compare the SAME posterior.
+
+    Returns (ds, grid, data, static, state).
+    """
+    from repro.core import psvgp, svgp
+    from repro.core.partition import make_grid, partition_data
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=n, seed=seed)
+    grid = make_grid(ds.x, grid_side, grid_side)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=m, input_dim=2),
+        delta=0.25, batch_size=32, learning_rate=0.05,
+    )
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(seed), cfg, data)
+    t0 = time.time()
+    state = psvgp.fit(static, state, data, train_iters)
+    jax.block_until_ready(state.params)
+    print(f"trained P={grid.num_partitions} partitions, m={m}, "
+          f"{train_iters} iters in {time.time()-t0:.1f} s")
+    return ds, grid, data, static, state
+
+
+def serve_sharded(args) -> dict:
+    """Train, shard the cache over the mesh, and run the routed query loop.
+
+    Mirrors ``serve.serve_gp`` (same flags) but serves from the distributed
+    cache; prints and returns the latency/throughput record, including an
+    allclose check against the replicated path on the first batch.
+    """
+    ensure_host_devices(args.gp_grid * args.gp_grid)
+
+    from repro.core import psvgp
+    from repro.core.blend import predict_blended
+
+    ds, grid, data, static, state = train_demo_surface(
+        seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
+        m=args.gp_m, train_iters=args.gp_train_iters,
+    )
+    cache = psvgp.posterior_cache(static, state)
+    mesh = mesh_for_grid(grid)
+    cache_sh = shard_cache(cache, mesh)
+    jax.block_until_ready(cache_sh)
+    total_b, device_b = cache_memory_bytes(cache_sh)
+    print(f"cache sharded over {mesh.size} devices: {total_b/1e6:.2f} MB total, "
+          f"{device_b/1e3:.1f} kB/device (1/{total_b // max(device_b,1)} of replicated)")
+
+    use_pallas = jax.default_backend() == "tpu"
+    blend_fn = make_sharded_blend(
+        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=use_pallas
+    )
+
+    rng = np.random.default_rng(args.seed + 1)
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+    B = args.gp_batch
+    batches = [
+        rng.uniform(lo, hi, (B, 2)).astype(np.float32)
+        for _ in range(args.gp_requests)
+    ]
+    # one fixed q_max across the request stream = one compile
+    q_max = fixed_q_max(grid, batches)
+
+    def answer(q):
+        table = routing.build_routing_table(grid, q, q_max=q_max)
+        xq, cs, cw = shard_table(table, mesh)
+        mean, var = blend_fn(cache_sh, xq, cs, cw)
+        jax.block_until_ready((mean, var))
+        return table, np.asarray(mean), np.asarray(var)
+
+    # warmup + equivalence check against the replicated path
+    table0, m0, v0 = answer(batches[0])
+    m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(batches[0]))
+    mean_err = float(np.abs(routing.scatter_results(table0, m0) - np.asarray(m_rep)).max())
+    var_err = float(np.abs(routing.scatter_results(table0, v0) - np.asarray(v_rep)).max())
+    print(f"sharded vs replicated on warmup batch: max|dmean|={mean_err:.2e} "
+          f"max|dvar|={var_err:.2e}")
+
+    def full_answer(q):
+        table, mean, var = answer(q)
+        return routing.scatter_results(table, mean), routing.scatter_results(table, var)
+
+    # already warmed: the equivalence check above compiled and ran batch 0
+    pct, qps = timed_request_loop(full_answer, batches, warm=False)
+    rec = {
+        "mesh": f"{grid.gy}x{grid.gx}",
+        "devices": mesh.size,
+        "q_max": q_max,
+        "latency_ms": pct,
+        "points_per_s": qps,
+        "mean_err_vs_replicated": mean_err,
+        "var_err_vs_replicated": var_err,
+        "cache_bytes_total": total_b,
+        "cache_bytes_per_device": device_b,
+    }
+    print(f"served {args.gp_requests} requests x {B} points")
+    print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
+          f"p95={pct['p95_ms']:.2f} p99={pct['p99_ms']:.2f}")
+    print(f"throughput: {qps:,.0f} points/s")
+    return rec
+
+
+def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> Tuple[dict, float]:
+    """The ONE serving measurement loop (shared by ``serve --gp``,
+    ``serve --gp --sharded`` and ``benchmarks.bench_serve``, so their SLO
+    reports stay comparable): warm up on batches[0] (compile), then time
+    each request end to end. Pass ``warm=False`` when the caller already
+    ran a batch through ``answer`` (e.g. for an equivalence check) — the
+    program is compiled and a second warmup pass would just burn a
+    request's worth of wall clock.
+
+    Returns ({p50_ms, p95_ms, p99_ms}, points_per_s).
+    """
+    if warm:
+        answer(batches[0])
+    lat = []
+    t_all = time.time()
+    for q in batches:
+        t0 = time.time()
+        answer(q)
+        lat.append(time.time() - t0)
+    wall = time.time() - t_all
+    ms = np.sort(np.asarray(lat)) * 1e3
+    pct = {
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p95_ms": float(np.percentile(ms, 95)),
+        "p99_ms": float(np.percentile(ms, 99)),
+    }
+    return pct, sum(len(q) for q in batches) / wall
+
+
+def fixed_q_max(
+    grid: PartitionGrid, batches, *, headroom: float = 1.25, pad_multiple: int = 8
+) -> int:
+    """One q_max covering every batch in a request stream (single compile):
+    the observed max bucket count with headroom, rounded up with the SAME
+    alignment rule ``routing.build_routing_table`` applies (pass the same
+    ``pad_multiple`` to both, or the table re-rounds and recompiles)."""
+    need = 1
+    for q in batches:
+        ix, iy = routing.owning_cells(grid, np.asarray(q, np.float32))
+        c = np.bincount(iy * grid.gx + ix, minlength=grid.num_partitions)
+        need = max(need, int(c.max()))
+    return routing.ceil_to(int(np.ceil(need * headroom)), pad_multiple)
+
+
+def cache_memory_bytes(cache: posterior.PosteriorCache) -> Tuple[int, int]:
+    """(total, per-device-addressable) bytes of the cache factor leaves."""
+    total = sum(leaf.nbytes for leaf in jax.tree.leaves(cache))
+    per_dev = 0
+    for leaf in jax.tree.leaves(cache):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards:
+            per_dev += shards[0].data.nbytes
+        else:
+            per_dev += leaf.nbytes
+    return total, per_dev
+
+
+def add_gp_args(ap: argparse.ArgumentParser) -> None:
+    """The --gp-* serving flags, shared with ``repro.launch.serve`` (which
+    defines --seed itself for the LM path, so it is added separately)."""
+    ap.add_argument("--gp-n", type=int, default=20_000, help="training observations")
+    ap.add_argument("--gp-grid", type=int, default=8, help="partition grid is gp-grid^2")
+    ap.add_argument("--gp-m", type=int, default=10, help="inducing points per partition")
+    ap.add_argument("--gp-train-iters", type=int, default=200)
+    ap.add_argument("--gp-batch", type=int, default=2048, help="query points per request")
+    ap.add_argument("--gp-requests", type=int, default=50)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    add_gp_args(ap)
+    args = ap.parse_args()
+    if args.gp_requests < 1 or args.gp_batch < 1:
+        ap.error("--gp-requests and --gp-batch must be >= 1")
+    serve_sharded(args)
+
+
+if __name__ == "__main__":
+    main()

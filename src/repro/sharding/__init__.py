@@ -2,8 +2,9 @@ from repro.sharding.rules import (
     batch_pspec,
     cache_pspecs,
     data_axes,
+    gp_stacked_pspecs,
     params_pspecs,
     state_pspecs,
 )
 
-__all__ = ["params_pspecs", "state_pspecs", "batch_pspec", "cache_pspecs", "data_axes"]
+__all__ = ["params_pspecs", "state_pspecs", "batch_pspec", "cache_pspecs", "data_axes", "gp_stacked_pspecs"]

@@ -154,6 +154,32 @@ def batch_pspec(mesh: Mesh, batch_shardable: bool = True) -> P:
     return P(data_axes(mesh)) if batch_shardable else P()
 
 
+def gp_stacked_pspecs(tree: Any, mesh: Mesh) -> Any:
+    """Specs for P-stacked GP serving pytrees: shard the leading partition
+    axis over ALL mesh axes (one partition per device).
+
+    Used for the ``repro.core.posterior.PosteriorCache`` (each device holds
+    exactly its own partition's factors — per-device cache memory is 1/P of
+    the replicated footprint) and for the routed query blocks of
+    ``repro.core.routing.RoutingTable``. The leading axis of every leaf
+    must equal ``mesh.size`` (the grid-to-mesh mapping of
+    ``repro.core.psvgp_spmd``: partition iy*gx+ix on device (row=iy,
+    col=ix)); anything else is a routing bug, so this raises instead of
+    falling back to replication.
+    """
+    lead = P(tuple(mesh.axis_names))
+
+    def spec(leaf):
+        if leaf.ndim < 1 or leaf.shape[0] != mesh.size:
+            raise ValueError(
+                f"GP-stacked leaf {leaf.shape} does not carry a leading "
+                f"partition axis of size mesh.size={mesh.size}"
+            )
+        return lead
+
+    return jax.tree.map(spec, tree)
+
+
 def cache_pspecs(cache: Any, mesh: Mesh, *, shard_seq: bool) -> Any:
     """Decode-cache specs.
 

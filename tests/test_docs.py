@@ -1,0 +1,124 @@
+"""Docs-check lane: the commands and snippets documented in README.md and
+docs/ must keep running as written (``make docs-check`` / ``pytest -m docs``).
+
+Enforcement levels:
+  * ```bash blocks — every ``python -m <module>`` command line must name an
+    importable module whose CLI still accepts every ``--flag`` used (checked
+    against the module's ``--help`` in a subprocess); plain
+    ``python <script>`` lines must name a file that byte-compiles.
+  * ```python blocks — executed verbatim (keep them small when documenting).
+
+Blocks that should not be checked use a different fence language (e.g.
+```text). ``python -m pytest`` lines are exempt from --help (pytest's own
+CLI), but any ``-m "<marker> ..."`` expression they use must only name
+markers registered in pyproject.toml.
+"""
+from __future__ import annotations
+
+import os
+import py_compile
+import re
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (os.listdir(os.path.join(REPO, "docs")) if os.path.isdir(os.path.join(REPO, "docs")) else [])
+    if f.endswith(".md")
+)
+
+_FENCE = re.compile(r"```(\w+)\n(.*?)```", re.DOTALL)
+
+
+def _blocks(lang: str):
+    out = []
+    for rel in DOC_FILES:
+        with open(os.path.join(REPO, rel)) as f:
+            text = f.read()
+        for m in _FENCE.finditer(text):
+            if m.group(1) == lang:
+                out.append((rel, m.group(2)))
+    return out
+
+
+def _command_lines():
+    """Join backslash continuations; yield (docfile, command) pairs."""
+    for rel, block in _blocks("bash"):
+        joined = re.sub(r"\\\n\s*", " ", block)
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                yield rel, line
+
+
+def _registered_markers():
+    with open(os.path.join(REPO, "pyproject.toml")) as f:
+        txt = f.read()
+    return set(re.findall(r'^\s*"(\w+):', txt, re.MULTILINE))
+
+
+_HELP_CACHE: dict = {}
+
+
+def _module_help(module: str) -> str:
+    if module not in _HELP_CACHE:
+        env = dict(os.environ, PYTHONPATH="src")
+        r = subprocess.run(
+            [sys.executable, "-m", module, "--help"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=300,
+        )
+        assert r.returncode == 0, (
+            f"`python -m {module} --help` failed:\n{r.stderr[-2000:]}"
+        )
+        _HELP_CACHE[module] = r.stdout + r.stderr
+    return _HELP_CACHE[module]
+
+
+@pytest.mark.docs
+@pytest.mark.parametrize("rel,cmd", list(_command_lines()),
+                         ids=[f"{r}:{c[:60]}" for r, c in _command_lines()])
+def test_documented_command(rel, cmd):
+    tokens = cmd.split()
+    assert "python" in tokens, f"{rel}: non-python command documented: {cmd}"
+    py = tokens.index("python")
+    rest = tokens[py + 1:]
+    if rest[:1] == ["-m"]:
+        module = rest[1]
+        flags = {t.split("=")[0] for t in rest[2:] if t.startswith("--")}
+        if module == "pytest":
+            # pytest's CLI is upstream; check our marker expressions only
+            markers = set()
+            m = re.search(r"-m\s+\"([^\"]+)\"", cmd)
+            if m:
+                markers = {w for w in re.findall(r"\w+", m.group(1))
+                           if w not in ("or", "and", "not")}
+            unknown = markers - _registered_markers()
+            assert not unknown, f"{rel}: unregistered pytest markers {unknown}: {cmd}"
+            return
+        help_text = _module_help(module)
+        # word-boundary match: "--gp" must not pass just because "--gp-grid"
+        # survives in the help text
+        missing = {
+            f for f in flags
+            if not re.search(rf"(?<![\w-]){re.escape(f)}(?![\w-])", help_text)
+        }
+        assert not missing, f"{rel}: flags {missing} not in `{module}` --help: {cmd}"
+    else:
+        script = rest[0]
+        path = os.path.join(REPO, script)
+        assert os.path.exists(path), f"{rel}: documented script missing: {script}"
+        py_compile.compile(path, doraise=True)
+
+
+@pytest.mark.docs
+@pytest.mark.parametrize("rel,code", _blocks("python"),
+                         ids=[r for r, _ in _blocks("python")])
+def test_documented_python_snippet(rel, code):
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    try:
+        exec(compile(code, f"<{rel} snippet>", "exec"), {"__name__": "__docs__"})
+    finally:
+        sys.path.pop(0)

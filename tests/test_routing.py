@@ -1,0 +1,129 @@
+"""Query routing for distributed serving (repro.core.routing) + the public
+corner_ids_weights API it is built on."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import psvgp, routing, svgp
+from repro.core.blend import _corner_ids_weights, corner_ids_weights, predict_blended
+from repro.core.partition import make_grid, partition_data
+from repro.data.spatial import e3sm_like_field
+
+
+def _grid_and_queries(gx=5, gy=4, n=613, seed=3):
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform([-1.0, 2.0], [3.0, 5.0], size=(n, 2)).astype(np.float32)
+    grid = make_grid(pts, gx, gy)
+    return grid, pts
+
+
+def test_corner_ids_weights_public_api():
+    """Weights are a partition of unity; ids always name the 4 cell-center
+    corners surrounding the point; the deprecated private alias still works
+    (and warns)."""
+    grid, pts = _grid_and_queries()
+    ids, w = corner_ids_weights(grid, pts)
+    assert ids.shape == (len(pts), 4) and w.shape == (len(pts), 4)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-6)
+    assert (w >= 0).all()
+    assert (ids >= 0).all() and (ids < grid.num_partitions).all()
+
+    # every corner is within one grid step (incl. diagonal) of the owner
+    ix, iy = routing.owning_cells(grid, pts)
+    dx = ids % grid.gx - ix[:, None]
+    dy = ids // grid.gx - iy[:, None]
+    assert (np.abs(dx) <= 1).all() and (np.abs(dy) <= 1).all()
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        ids2, w2 = _corner_ids_weights(grid, pts)
+    assert any(issubclass(c.category, DeprecationWarning) for c in caught)
+    np.testing.assert_array_equal(ids, ids2)
+    np.testing.assert_array_equal(w, w2)
+
+
+def test_routing_table_round_trip():
+    """Every query lands in its owning cell's block exactly once, slots
+    reconstruct the corner ids, and scatter inverts the routing."""
+    grid, pts = _grid_and_queries()
+    table = routing.build_routing_table(grid, pts)
+
+    P, qm = table.num_partitions, table.q_max
+    assert P == grid.num_partitions and qm % 8 == 0
+    assert table.num_queries == len(pts)
+    np.testing.assert_array_equal(
+        table.counts, np.bincount(
+            routing.owning_cells(grid, pts)[1] * grid.gx
+            + routing.owning_cells(grid, pts)[0],
+            minlength=P,
+        ),
+    )
+    # each partition's valid rows hold points inside that partition's cell
+    for p in range(P):
+        k = int(table.counts[p])
+        assert (table.qmask[p, :k] == 1).all() and (table.qmask[p, k:] == 0).all()
+        ix, iy = grid.cell_of(p)
+        x = table.xq[p, :k]
+        assert (grid.x_edges[ix] <= x[:, 0]).all() and (x[:, 0] <= grid.x_edges[ix + 1]).all()
+        assert (grid.y_edges[iy] <= x[:, 1]).all() and (x[:, 1] <= grid.y_edges[iy + 1]).all()
+
+    # scatter is the exact inverse of the routing permutation
+    np.testing.assert_array_equal(routing.scatter_results(table, table.xq), pts)
+    # weights ride along unchanged and padded rows carry zero weight
+    w_back = routing.scatter_results(table, table.corner_w)
+    np.testing.assert_array_equal(w_back, corner_ids_weights(grid, pts)[1])
+    assert (table.corner_w[table.qmask == 0] == 0).all()
+
+    # halo-slot encoding: slot k of owner p names partition halo_ids[p, k],
+    # which must equal the blend's corner id
+    hids = routing.halo_ids(grid)
+    ids = corner_ids_weights(grid, pts)[0]
+    slot_back = routing.scatter_results(table, table.corner_slot)
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    np.testing.assert_array_equal(np.take_along_axis(hids[own], slot_back, axis=1), ids)
+
+
+def test_routing_table_overflow_and_padding():
+    grid, pts = _grid_and_queries(n=64)
+    with pytest.raises(ValueError):
+        routing.build_routing_table(grid, pts, q_max=1)
+    t = routing.build_routing_table(grid, pts, q_max=50)
+    assert t.q_max == 56  # rounded up to the pad multiple
+    # padded rows are the owning cell's center (in-domain covariance input)
+    p = int(np.argmin(t.counts))
+    if t.counts[p] < t.q_max:
+        ix, iy = grid.cell_of(p)
+        cx = 0.5 * (grid.x_edges[ix] + grid.x_edges[ix + 1])
+        cy = 0.5 * (grid.y_edges[iy] + grid.y_edges[iy + 1])
+        np.testing.assert_allclose(t.xq[p, -1], [cx, cy], rtol=1e-6)
+
+
+def test_predict_routed_matches_predict_blended():
+    """The routed (sharded-math) serving path == the replicated blend on a
+    trained model — the single-host half of the distributed-equivalence
+    guarantee (the SPMD half is tests/test_serve_sharded.py)."""
+    ds = e3sm_like_field(n=3000, seed=0)
+    grid = make_grid(ds.x, 4, 4)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=6, input_dim=2),
+        delta=0.25, batch_size=16, learning_rate=0.05,
+    )
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+    state = psvgp.fit(static, state, data, 300)
+
+    rng = np.random.default_rng(1)
+    lo, hi = np.asarray(ds.x).min(0), np.asarray(ds.x).max(0)
+    q = rng.uniform(lo, hi, (513, 2)).astype(np.float32)
+
+    cache = psvgp.posterior_cache(static, state)
+    table = routing.build_routing_table(grid, q)
+    m_rt, v_rt = routing.predict_routed(cache, static.cov_fn, grid, table)
+    m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
+    np.testing.assert_allclose(m_rt, np.asarray(m_rep), atol=1e-5)
+    np.testing.assert_allclose(v_rt, np.asarray(v_rep), atol=1e-5)

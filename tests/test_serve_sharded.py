@@ -1,0 +1,101 @@
+"""Sharded (shard_map + halo-exchange) serving == replicated serving.
+
+Like tests/test_psvgp_spmd.py, the SPMD program needs multiple XLA host
+devices configured before jax initializes, so the checks run in one
+subprocess with its own XLA_FLAGS. Covered there:
+
+  * halo exchange resolves corners exactly (probe payload = partition id,
+    compared against routing.halo_ids — the SPMD corner-resolution test);
+  * sharded blend == predict_routed reference == replicated
+    predict_blended to atol 1e-5 on the same trained state;
+  * per-device cache-factor memory is exactly 1/P of replicated;
+  * the lowered program contains collective-permutes and NO all-gather of
+    the cache factors (the decentralized-serving claim).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import psvgp, routing, svgp
+    from repro.core.blend import predict_blended
+    from repro.core.partition import make_grid, partition_data
+    from repro.data.spatial import e3sm_like_field
+    from repro.launch import serve_sharded as ss
+
+    ds = e3sm_like_field(n=3000, seed=0)
+    grid = make_grid(ds.x, gx=4, gy=4)
+    data = partition_data(ds.x, ds.y, grid)
+    cfg = psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(num_inducing=6, input_dim=2),
+        delta=0.25, batch_size=16, learning_rate=0.05)
+    static = psvgp.build(cfg, data)
+    state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
+    state = psvgp.fit(static, state, data, 300)
+    cache = psvgp.posterior_cache(static, state)
+    mesh = ss.mesh_for_grid(grid)
+
+    # --- halo-exchange corner resolution: ship each device its pid, check
+    # every on-grid slot sees the right neighbor and off-grid slots zero.
+    pid = jnp.arange(grid.num_partitions, dtype=jnp.float32)[:, None]
+    halo = np.asarray(ss.make_halo_gather(mesh, mesh.axis_names, grid)(pid))[:, :, 0]
+    hids = routing.halo_ids(grid)
+    for p in range(grid.num_partitions):
+        ix, iy = grid.cell_of(p)
+        for k, (dx, dy) in enumerate(routing.OFFSETS):
+            on_grid = 0 <= ix + dx < grid.gx and 0 <= iy + dy < grid.gy
+            want = float(hids[p, k]) if on_grid else 0.0
+            assert halo[p, k] == want, (p, k, halo[p, k], want)
+
+    # --- sharded == routed reference == replicated ---
+    cache_sh = ss.shard_cache(cache, mesh)
+    total_b, device_b = ss.cache_memory_bytes(cache_sh)
+    assert total_b == device_b * grid.num_partitions, (total_b, device_b)
+
+    rng = np.random.default_rng(1)
+    lo, hi = np.asarray(ds.x).min(0), np.asarray(ds.x).max(0)
+    q = rng.uniform(lo, hi, (777, 2)).astype(np.float32)
+    table = routing.build_routing_table(grid, q)
+    xq, cs, cw = ss.shard_table(table, mesh)
+    blend_fn = ss.make_sharded_blend(mesh, mesh.axis_names, grid, static.cov_fn, cache_sh)
+    mean, var = blend_fn(cache_sh, xq, cs, cw)
+    m_sh = routing.scatter_results(table, np.asarray(mean))
+    v_sh = routing.scatter_results(table, np.asarray(var))
+
+    m_rt, v_rt = routing.predict_routed(cache, static.cov_fn, grid, table)
+    m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
+    np.testing.assert_allclose(m_sh, m_rt, atol=1e-5)
+    np.testing.assert_allclose(v_sh, v_rt, atol=1e-5)
+    np.testing.assert_allclose(m_sh, np.asarray(m_rep), atol=1e-5)
+    np.testing.assert_allclose(v_sh, np.asarray(v_rep), atol=1e-5)
+
+    # --- the program must be halo-shaped: collective-permute yes,
+    # all-gather of factors no ---
+    txt = blend_fn.lower(cache_sh, xq, cs, cw).as_text()
+    assert ("collective_permute" in txt) or ("collective-permute" in txt), \
+        "no collective-permute in the lowered serving program"
+    assert "all-gather" not in txt and "all_gather" not in txt, \
+        "serving program gathers state — the cache must stay sharded"
+    print("OK")
+    """
+)
+
+
+@pytest.mark.slow
+def test_sharded_serving_matches_replicated():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout
