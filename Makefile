@@ -1,7 +1,7 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check bench-predict bench-serve
+.PHONY: test test-full docs-check bench-predict bench-serve bench-serve-smoke
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
@@ -17,3 +17,6 @@ bench-predict:   ## cached-prediction speedup report -> BENCH_predict.json
 
 bench-serve:     ## replicated-vs-sharded serving SLO report -> BENCH_serve.json
 	$(PY) -m benchmarks.bench_serve
+
+bench-serve-smoke: ## seconds-scale serving pipeline smoke (3x3 mesh; also runs in tier-1 via the smoke marker)
+	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json

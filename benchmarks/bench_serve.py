@@ -1,26 +1,37 @@
-"""Serving SLO benchmark — replicated vs sharded PosteriorCache.
-
-Trains one PSVGP on the synthetic E3SM-like field, then serves the same
-request stream twice:
+"""Serving SLO benchmark — replicated vs sharded PosteriorCache, with the
+sharded path measured in all three of its regimes:
 
   * replicated — ``blend.predict_blended`` against the full cache on one
     device (the ``launch/serve.py --gp`` path);
-  * sharded — the distributed endpoint of ``launch/serve_sharded``: cache
-    factors one-partition-per-device over a gy x gx mesh, queries routed by
-    ``core/routing``, corners resolved with the 1-hop ppermute halo.
-    Sharded latency INCLUDES host-side routing + result scatter.
+  * sharded serial — the distributed endpoint of ``launch/serve_sharded``
+    run synchronously: route, halo-stack, transfer + evaluate, scatter,
+    one request at a time (the PR-2 measurement regime, on the rebuilt
+    program). q_max comes from the whole-stream prepass
+    (``prepass_routing``), whose binning the table build REUSES;
+  * sharded pipelined — the overlapped driver
+    (``pipelined_request_loop``): batch t+1 is routed on the host while
+    the mesh evaluates batch t, q_max follows the streaming
+    high-water-mark policy (``routing.StreamingQMax``), and the loop only
+    blocks when a result is consumed. Results are bitwise identical to
+    serial (checked);
+  * sharded pipelined fused — same, with the slot-stacked Pallas predict
+    kernel (``use_pallas=True``). On CPU the kernel runs in INTERPRET
+    mode, so its latency lane is informative only there (and runs a
+    shortened stream); on TPU it is the production configuration.
 
-Reports p50/p95/p99 request latency and points/s throughput for both
-paths, the sharded-vs-replicated allclose gate (atol 1e-5), and per-device
-cache-factor memory (sharded must be ~1/P of replicated). Default shapes
+Reports p50/p95/p99 request latency and points/s throughput per lane, the
+sharded-vs-replicated allclose gate (atol 1e-5), pipelined-vs-serial
+bitwise equality, per-device cache-factor memory (sharded must be ~1/P of
+replicated), and the speedup of the rebuilt lanes over the committed PR-2
+sharded baseline (p50 284.7 ms on the same 16x16 mesh). Default shapes
 are the ROADMAP's 16x16 dry-run mesh — 256 VIRTUAL host devices
-time-slicing this CPU, so sharded wall-clock is an upper bound (every
-"device" shares one socket); the equivalence, memory, and report structure
-are the deliverable, the absolute numbers become meaningful on a real
-mesh.
+time-slicing this CPU, so sharded wall-clock is an upper bound; the
+equivalence, memory, and report structure are the deliverable, the
+absolute numbers become meaningful on a real mesh.
 
   PYTHONPATH=src python -m benchmarks.bench_serve           # emits BENCH_serve.json
   PYTHONPATH=src python -m benchmarks.bench_serve --quick   # CI-sized (4x4 mesh)
+  PYTHONPATH=src python -m benchmarks.bench_serve --smoke   # seconds (3x3 mesh)
 """
 from __future__ import annotations
 
@@ -28,6 +39,11 @@ import argparse
 import json
 
 import numpy as np
+
+# The committed PR-2 sharded lane (BENCH_serve.json at commit b8b3a10,
+# 16x16 mesh, serial, per-slot ppermute halo) — the regression baseline
+# the rebuilt pipeline is gated against.
+PR2_SHARDED_P50_MS = 284.726
 
 
 def run(
@@ -38,6 +54,7 @@ def run(
     train_iters: int = 400,
     batch: int = 2048,
     requests: int = 32,
+    fused_requests: int | None = None,
     out_path: str = "BENCH_serve.json",
 ) -> dict:
     # virtual devices must be forced before any jax computation
@@ -50,6 +67,12 @@ def run(
 
     from repro.core import psvgp, routing
     from repro.core.blend import predict_blended
+
+    on_tpu = jax.default_backend() == "tpu"
+    if fused_requests is None:
+        # interpret-mode Pallas (CPU) is a correctness lane, not a speed
+        # lane — keep it short there; on TPU measure the full stream.
+        fused_requests = requests if on_tpu else min(requests, 4)
 
     print(f"# bench_serve: grid={grid_side}x{grid_side} m={m} B={batch} "
           f"requests={requests} backend={jax.default_backend()}")
@@ -69,7 +92,7 @@ def run(
         rng.uniform(lo, hi, (batch, 2)).astype(np.float32) for _ in range(requests)
     ]
 
-    # ---- replicated path --------------------------------------------------
+    # ---- replicated lane --------------------------------------------------
     def rep_answer(q):
         out = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
         jax.block_until_ready(out)
@@ -77,21 +100,29 @@ def run(
 
     pct_rep, qps_rep = ss.timed_request_loop(rep_answer, batches)
 
-    # ---- sharded path -----------------------------------------------------
+    # ---- sharded setup ----------------------------------------------------
     mesh = ss.mesh_for_grid(grid)
     cache_sh = ss.shard_cache(cache, mesh)
     jax.block_until_ready(cache_sh)
     total_b, device_b = ss.cache_memory_bytes(cache_sh)
     blend_fn = ss.make_sharded_blend(
-        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh,
-        use_pallas=(jax.default_backend() == "tpu"),
+        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh
     )
-    q_max = ss.fixed_q_max(grid, batches)
+
+    # ---- sharded serial lane (whole-stream prepass q_max) -----------------
+    q_max, cells = ss.prepass_routing(grid, batches)
+    stacker = routing.make_halo_stacker(grid)
+
+    serial_results = []
+    idx = {"i": 0}
 
     def sh_answer(q):
-        table = routing.build_routing_table(grid, q, q_max=q_max)
-        xq, cs, cw = ss.shard_table(table, mesh)
-        mean, var = blend_fn(cache_sh, xq, cs, cw)
+        i = idx["i"] % len(batches)
+        idx["i"] += 1
+        table = routing.build_routing_table(grid, q, q_max=q_max, cells=cells[i])
+        mean, var = blend_fn(
+            cache_sh, stacker(table.xq), table.corner_slot, table.corner_w
+        )
         jax.block_until_ready((mean, var))
         return (
             routing.scatter_results(table, np.asarray(mean)),
@@ -99,12 +130,50 @@ def run(
         )
 
     m_sh, v_sh = sh_answer(batches[0])  # warmup / compile + equivalence gate
+    idx["i"] = 0
     m_rep, v_rep = rep_answer(batches[0])
     mean_err = float(np.abs(m_sh - np.asarray(m_rep)).max())
     var_err = float(np.abs(v_sh - np.asarray(v_rep)).max())
 
-    # equivalence check above already compiled + warmed the sharded path
-    pct_sh, qps_sh = ss.timed_request_loop(sh_answer, batches, warm=False)
+    def sh_answer_keep(q):
+        out = sh_answer(q)
+        serial_results.append(out)
+        return out
+
+    # the equivalence check above already compiled + warmed the program
+    pct_serial, qps_serial = ss.timed_request_loop(sh_answer_keep, batches, warm=False)
+
+    # ---- sharded pipelined lane (streaming q_max) -------------------------
+    policy = routing.StreamingQMax()
+    route, submit, collect = ss.make_request_stages(
+        grid, blend_fn, cache_sh, policy=policy
+    )
+    pipe_results = {}
+    pct_pipe, qps_pipe = ss.pipelined_request_loop(
+        route, submit, collect, batches,
+        warm=True, on_result=lambda i, out: pipe_results.setdefault(i, out),
+    )
+    bitwise = all(
+        np.array_equal(pipe_results[i][0], serial_results[i][0])
+        and np.array_equal(pipe_results[i][1], serial_results[i][1])
+        for i in range(len(batches))
+    )
+
+    # ---- fused-kernel lane (slot-stacked Pallas predict) ------------------
+    blend_fused = ss.make_sharded_blend(
+        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=True
+    )
+    policy_f = routing.StreamingQMax()
+    route_f, submit_f, collect_f = ss.make_request_stages(
+        grid, blend_fused, cache_sh, policy=policy_f
+    )
+    fused_stream = batches[:fused_requests]
+    m_fu, v_fu = collect_f(submit_f(route_f(batches[0])))  # warm + compare
+    fused_mean_err = float(np.abs(m_fu - serial_results[0][0]).max())
+    fused_var_err = float(np.abs(v_fu - serial_results[0][1]).max())
+    pct_fused, qps_fused = ss.pipelined_request_loop(
+        route_f, submit_f, collect_f, fused_stream, warm=False
+    )
 
     rec = {
         "P": grid.num_partitions,
@@ -114,24 +183,47 @@ def run(
         "backend": jax.default_backend(),
         "batch": batch,
         "requests": requests,
-        "q_max": q_max,
         "replicated": {
             **pct_rep,
             "points_per_s": qps_rep,
             "cache_bytes_per_device": total_b,
         },
-        "sharded": {
-            **pct_sh,
-            "points_per_s": qps_sh,
+        "sharded_serial": {
+            **pct_serial,
+            "points_per_s": qps_serial,
+            "q_max": q_max,
             "cache_bytes_per_device": device_b,
             "cache_shard_ratio": total_b / max(device_b, 1),
+        },
+        "sharded_pipelined": {
+            **pct_pipe,
+            "points_per_s": qps_pipe,
+            "qmax_policy": policy.stats(),
+        },
+        "sharded_pipelined_fused": {
+            **pct_fused,
+            "points_per_s": qps_fused,
+            "requests": len(fused_stream),
+            "interpret": not on_tpu,
         },
         "equivalence": {
             "max_abs_err_mean": mean_err,
             "max_abs_err_var": var_err,
             "atol_1e5_ok": bool(mean_err <= 1e-5 and var_err <= 1e-5),
+            "pipelined_bitwise_serial": bool(bitwise),
+            "fused_vs_jnp_max_abs_err_mean": fused_mean_err,
+            "fused_vs_jnp_max_abs_err_var": fused_var_err,
+        },
+        "speedup": {
+            "pipelined_vs_serial_p50": pct_serial["p50_ms"] / pct_pipe["p50_ms"],
         },
     }
+    if grid_side == 16 and m == 8 and batch == 2048:
+        # the PR-2 baseline was recorded on exactly this configuration —
+        # a cross-shape ratio (--quick/--smoke) would be meaningless
+        rec["baseline"] = {"pr2_sharded_p50_ms": PR2_SHARDED_P50_MS}
+        rec["speedup"]["serial_vs_pr2_p50"] = PR2_SHARDED_P50_MS / pct_serial["p50_ms"]
+        rec["speedup"]["pipelined_vs_pr2_p50"] = PR2_SHARDED_P50_MS / pct_pipe["p50_ms"]
     print(json.dumps(rec, indent=2))
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)
@@ -142,9 +234,15 @@ def run(
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="CI-sized shapes (4x4 mesh)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale shapes (3x3 mesh) — the regression "
+                         "smoke lane (make bench-serve-smoke)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
-    if args.quick:
+    if args.smoke:
+        run(grid_side=3, m=5, n_train=1200, train_iters=150, batch=128,
+            requests=6, fused_requests=2, out_path=args.out)
+    elif args.quick:
         run(grid_side=4, m=6, n_train=4000, train_iters=200, batch=512,
             requests=10, out_path=args.out)
     else:

@@ -1,6 +1,14 @@
-"""Serve a small model with batched requests (prefill + decode loop).
+"""Serve a small model with batched requests.
+
+LM mode (default): prefill + decode loop on a smoke-sized architecture.
+GP mode (--gp): the paper's serving path — train the partitioned PSVGP
+surface and answer query batches from the cached factors; --sharded
+serves from the mesh-sharded cache through the overlapped pipeline
+(virtual devices on CPU).
 
   PYTHONPATH=src python examples/serve_demo.py --arch recurrentgemma-2b
+  PYTHONPATH=src python examples/serve_demo.py --gp
+  PYTHONPATH=src python examples/serve_demo.py --gp --sharded
 """
 import argparse
 import subprocess
@@ -13,14 +21,28 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gp", action="store_true",
+                    help="serve the blended PSVGP surface instead of an LM")
+    ap.add_argument("--sharded", action="store_true",
+                    help="GP mode: mesh-sharded cache + overlapped pipeline")
     args = ap.parse_args()
-    sys.exit(subprocess.call([
-        sys.executable, "-m", "repro.launch.serve",
-        "--arch", args.arch, "--smoke",
-        "--batch", str(args.batch),
-        "--prompt-len", str(args.prompt_len),
-        "--gen", str(args.gen),
-    ]))
+    if args.gp:
+        cmd = [
+            sys.executable, "-m", "repro.launch.serve", "--gp",
+            "--gp-grid", "4", "--gp-n", "4000", "--gp-m", "6",
+            "--gp-train-iters", "150", "--gp-batch", "512", "--gp-requests", "12",
+        ]
+        if args.sharded:
+            cmd.append("--sharded")
+    else:
+        cmd = [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", args.arch, "--smoke",
+            "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len),
+            "--gen", str(args.gen),
+        ]
+    sys.exit(subprocess.call(cmd))
 
 
 if __name__ == "__main__":

@@ -140,14 +140,16 @@ def predict_cached(
     fvar  = k_** - ||W k_*||^2 + ||U k_*||^2     (clamped to >= 1e-12)
 
     ``use_pallas`` routes K(x*,Z) + both projections + the reductions
-    through the fused prediction kernel (RBF covariance only).
+    through the fused prediction kernel — RBF covariance only, and that is
+    VALIDATED: the kernel computes the RBF whatever ``cov_fn`` is, so a
+    non-RBF covariance raises instead of silently returning RBF answers.
     """
     if use_pallas:
         from repro.kernels import ops as kops
 
         fmean, fvar = kops.posterior_predict(
             xstar, cache.z, cache.cov.log_lengthscale, cache.cov.log_variance,
-            cache.w, cache.u, cache.c,
+            cache.w, cache.u, cache.c, cov_fn=cov_fn,
         )
     else:
         knm = cov_fn(cache.cov, xstar, cache.z)  # (Q, m)
@@ -207,6 +209,44 @@ def predict_cached_stacked(
             ca, cov_fn, xq, include_noise=include_noise, use_pallas=use_pallas
         )
     )(cache, xstar)
+
+
+def predict_cached_slots(
+    cache: PosteriorCache,
+    cov_fn: Callable,
+    xslots: jnp.ndarray,
+    *,
+    include_noise: bool = False,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ONE model evaluated on S stacked query blocks: xslots (S, Q, d).
+
+    This is the device-side serving hot path: the sharded blend evaluates
+    the local model on all 9 halo slots at once. With ``use_pallas`` the
+    whole stack is a SINGLE fused Pallas launch whose grid spans
+    (S x q-blocks) with W/U/c resident across the grid
+    (``repro.kernels.predict.posterior_predict_slots_pallas``) — no
+    (S*Q, d) reshape round-trip and no per-slot re-staging of the factors.
+    The jnp path is a vmap of :func:`predict_cached` over the slot axis.
+
+    Returns (fmean (S, Q), fvar (S, Q)); fvar clamped to >= 1e-12.
+    Non-RBF covariances raise under ``use_pallas`` (see
+    ``repro.kernels.ops.require_rbf``).
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        fmean, fvar = kops.posterior_predict_slots(
+            xslots, cache.z, cache.cov.log_lengthscale, cache.cov.log_variance,
+            cache.w, cache.u, cache.c, cov_fn=cov_fn,
+        )
+        fvar = jnp.maximum(fvar, 1e-12)
+        if include_noise:
+            fvar = fvar + jnp.exp(-cache.log_beta)
+        return fmean, fvar
+    return jax.vmap(
+        lambda xs: predict_cached(cache, cov_fn, xs, include_noise=include_noise)
+    )(xslots)
 
 
 def take_cache(cache: PosteriorCache, ids: jnp.ndarray) -> PosteriorCache:

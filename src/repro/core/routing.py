@@ -125,6 +125,7 @@ def build_routing_table(
     *,
     q_max: int | None = None,
     pad_multiple: int = 8,
+    cells: Tuple[np.ndarray, np.ndarray] | None = None,
 ) -> RoutingTable:
     """Bucket a query batch by owning partition into padded device blocks.
 
@@ -136,6 +137,12 @@ def build_routing_table(
         bucket overflows an explicit q_max — routing must never silently
         drop queries.
       pad_multiple: round q_max up to this (TPU sublane alignment).
+      cells: precomputed ``owning_cells(grid, points)`` for this batch.
+        Callers that already binned the batch (the q_max policies — both
+        :class:`StreamingQMax` and the whole-stream prepass — must count
+        buckets before the table is built) pass it through so the binning
+        runs ONCE per request, not once per policy decision plus once per
+        table; omitted, it is computed here.
 
     Returns a :class:`RoutingTable` (see its docstring for shapes).
     """
@@ -145,7 +152,12 @@ def build_routing_table(
     n = pts.shape[0]
     P = grid.num_partitions
 
-    ix, iy = owning_cells(grid, pts)
+    ix, iy = owning_cells(grid, pts) if cells is None else cells
+    if ix.shape != (n,) or iy.shape != (n,):
+        raise ValueError(
+            f"cells must be owning_cells output for the batch: expected two "
+            f"({n},) arrays, got {ix.shape} and {iy.shape}"
+        )
     own = iy * grid.gx + ix  # (N,) flat owning partition
     ids, w = corner_ids_weights(grid, pts)  # (N, 4), (N, 4)
     dx = ids % grid.gx - ix[:, None]  # (N, 4) in {-1, 0, 1}
@@ -192,6 +204,94 @@ def build_routing_table(
         xq=xq, qmask=qmask, corner_slot=corner_slot, corner_w=corner_w,
         src_idx=src_idx, counts=counts,
     )
+
+
+class StreamingQMax:
+    """Streaming high-water-mark q_max policy for a LIVE request stream.
+
+    The whole-stream prepass (``serve_sharded.fixed_q_max``) needs every
+    batch up front — impossible for a real stream. This policy instead
+    grows q_max only when a batch's max bucket count overflows the current
+    high-water mark, jumping to ``need * headroom`` rounded up with the
+    SAME :func:`ceil_to` alignment the table applies. Multiplicative
+    headroom bounds the total number of shape changes (device-program
+    recompiles) at O(log_headroom(peak_need / first_need)) however long
+    the stream runs; both overflows and compiles are counted so the
+    serving report can show them.
+
+    Usage per batch::
+
+        cells = routing.owning_cells(grid, q)
+        q_max = policy.fit(np.bincount(cells_flat, minlength=P))
+        table = routing.build_routing_table(grid, q, q_max=q_max, cells=cells)
+    """
+
+    def __init__(self, *, headroom: float = 1.25, pad_multiple: int = 8):
+        if headroom < 1.0:
+            raise ValueError(f"headroom must be >= 1, got {headroom}")
+        self.headroom = float(headroom)
+        self.pad_multiple = int(pad_multiple)
+        self.q_max = 0  # current high-water mark (0 = nothing seen yet)
+        self.compiles = 0  # shape changes, INCLUDING the first batch
+        self.overflows = 0  # batches that burst the previous high-water mark
+
+    def fit(self, counts: np.ndarray) -> int:
+        """Observe a batch's per-partition bucket counts; return the q_max
+        to route it with (always >= the batch's max bucket)."""
+        need = max(int(np.max(counts)) if np.size(counts) else 0, 1)
+        if need > self.q_max:
+            if self.q_max:
+                self.overflows += 1
+            self.q_max = ceil_to(
+                int(np.ceil(need * self.headroom)), self.pad_multiple
+            )
+            self.compiles += 1
+        return self.q_max
+
+    def stats(self) -> dict:
+        """The SLO-report record: current mark + recompile/overflow counts."""
+        return {
+            "q_max": self.q_max,
+            "compiles": self.compiles,
+            "overflows": self.overflows,
+        }
+
+
+def halo_slot_on_grid(grid: PartitionGrid) -> np.ndarray:
+    """(P, 9) float32 {0,1}: 1 where the slot's neighbor exists on the grid
+    (complement of the off-grid slots ``halo_ids`` clamps to self)."""
+    P = grid.num_partitions
+    on = np.zeros((P, NUM_HALO_SLOTS), np.float32)
+    for p in range(P):
+        ix, iy = grid.cell_of(p)
+        for k, (dx, dy) in enumerate(OFFSETS):
+            if 0 <= ix + dx < grid.gx and 0 <= iy + dy < grid.gy:
+                on[p, k] = 1.0
+    return on
+
+
+def make_halo_stacker(grid: PartitionGrid) -> Callable[[np.ndarray], np.ndarray]:
+    """Build ``stack(xq) -> hx``: the host-side halo ingest of the sharded
+    serving program.
+
+    hx (P, 9, q_max, d) with hx[p, k] = xq[p + OFFSETS[k]] (zeros where the
+    neighbor is off-grid — matching ppermute's edge semantics, so the device
+    program computes exactly what a mesh-side query exchange would). The
+    queries are HOST data: the router already holds every partition's
+    block, so shipping each device its full 9-slot stack directly through
+    ingest costs one device_put and ZERO mesh collectives — the 1-hop
+    reverse halo is reserved for the results, which really do live on
+    devices. The (halo_ids, on-grid-mask) tables are precomputed here, once
+    per grid, off the per-request path.
+    """
+    hids = halo_ids(grid)  # (P, 9)
+    on = halo_slot_on_grid(grid)  # (P, 9)
+
+    def stack(xq: np.ndarray) -> np.ndarray:
+        xq = np.asarray(xq)
+        return xq[hids] * on[..., None, None].astype(xq.dtype)
+
+    return stack
 
 
 def scatter_results(table: RoutingTable, values: np.ndarray) -> np.ndarray:

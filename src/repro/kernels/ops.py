@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
+from repro.gp.covariances import rbf as _rbf_covariance
 from repro.kernels import ref
-from repro.kernels.predict import posterior_predict_pallas
+from repro.kernels.predict import posterior_predict_pallas, posterior_predict_slots_pallas
 from repro.kernels.rbf import rbf_cross_cov_pallas
 from repro.kernels.svgp_proj import svgp_projection_pallas
 
@@ -27,6 +28,25 @@ _SUBLANE = 8
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def require_rbf(cov_fn) -> None:
+    """Refuse to route a non-RBF covariance through the Pallas kernels.
+
+    Every kernel in this package hard-codes the ARD-RBF; dispatching any
+    other covariance through them would silently return RBF answers (the
+    kernel only ever sees log_lengthscale/log_variance, not ``cov_fn``).
+    Callers that know their covariance (``posterior.predict_cached`` and
+    friends) pass it here before taking the ``use_pallas`` path; ``None``
+    is accepted for call sites that only handle the RBF by construction.
+    """
+    if cov_fn is not None and cov_fn is not _rbf_covariance:
+        name = getattr(cov_fn, "__name__", repr(cov_fn))
+        raise ValueError(
+            f"the Pallas prediction kernels implement only the 'rbf' "
+            f"covariance, got {name!r}; run with use_pallas=False (the jnp "
+            "path supports every covariance in repro.gp.covariances)"
+        )
 
 
 def _round_up(n: int, k: int) -> int:
@@ -118,6 +138,7 @@ def posterior_predict(
     c: jnp.ndarray,
     *,
     interpret: bool | None = None,
+    cov_fn=None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused cached-posterior prediction, padding-safe (serving hot path).
 
@@ -127,8 +148,11 @@ def posterior_predict(
     (callers own that, matching the jnp path in posterior.predict_cached).
 
     Zero-padding w/u/c makes the padded inducing slots exactly inert; the
-    padded query rows are computed then stripped.
+    padded query rows are computed then stripped. ``cov_fn``, when given,
+    is validated by :func:`require_rbf` — the kernel computes the RBF
+    whatever the caller believes their covariance is.
     """
+    require_rbf(cov_fn)
     interpret = _interpret_default() if interpret is None else interpret
     Q, d = x.shape
     m = z.shape[0]
@@ -145,9 +169,53 @@ def posterior_predict(
     return mean[:Q], fvar[:Q]
 
 
+def posterior_predict_slots(
+    hx: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    interpret: bool | None = None,
+    cov_fn=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Slot-stacked fused prediction: hx (S, Q, d) -> (mean, fvar) (S, Q).
+
+    The sharded serving hot path: ONE model evaluated on S stacked query
+    blocks (the 9 halo slots) in a single Pallas launch whose grid spans
+    (S x q-blocks) with W/U/c resident across the whole grid — see
+    ``repro.kernels.predict.posterior_predict_slots_pallas``. Padding
+    contract and output conventions match :func:`posterior_predict`
+    (per-slot query rows padded then stripped; fvar un-clamped).
+    """
+    require_rbf(cov_fn)
+    interpret = _interpret_default() if interpret is None else interpret
+    S, Q, d = hx.shape
+    m = z.shape[0]
+    bq = min(_LANE, _round_up(Q, _SUBLANE))
+    Qp, mp = _round_up(Q, bq), _round_up(m, _LANE)
+    hp = jnp.pad(hx, ((0, 0), (0, Qp - Q), (0, 0)))
+    zp = jnp.pad(z, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, mp - m), (0, mp - m)))
+    up = jnp.pad(u, ((0, mp - m), (0, mp - m)))
+    cp = jnp.pad(c, (0, mp - m))
+    mean, fvar = posterior_predict_slots_pallas(
+        hp, zp, log_lengthscale, log_variance, wp, up, cp,
+        block_q=bq, interpret=interpret,
+    )
+    return mean[:, :Q], fvar[:, :Q]
+
+
 def posterior_predict_ref(x, z, log_lengthscale, log_variance, w, u, c):
     """Pure-jnp reference with the same signature (the allclose target)."""
     return ref.posterior_predict(x, z, log_lengthscale, log_variance, w, u, c)
+
+
+def posterior_predict_slots_ref(hx, z, log_lengthscale, log_variance, w, u, c):
+    """Pure-jnp slot-stacked reference (the allclose target)."""
+    return ref.posterior_predict_slots(hx, z, log_lengthscale, log_variance, w, u, c)
 
 
 # Reference implementation re-exported so benchmarks/tests can compare the

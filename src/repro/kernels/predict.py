@@ -18,6 +18,13 @@ the 128-lane width, and zero-pads W/U/c so padded inducing slots are inert
 (zero COLUMNS of W/U kill the garbage knm columns; zero c entries kill them
 in the mean). k_** for the stationary RBF is the process variance, exact
 regardless of padding. Dispatch + padding live in ``kernels/ops.py``.
+
+``posterior_predict_slots_pallas`` is the slot-stacked variant for the
+SHARDED serving program: one launch whose grid spans (S halo slots x
+q-blocks), evaluating the local model on all S stacked query blocks while
+W, U and c stay resident in VMEM across the WHOLE (S x Qb) grid — the
+factors are staged into VMEM once per request instead of once per slot,
+and the (9*q_max, d) reshape round-trip of the unstacked call disappears.
 """
 from __future__ import annotations
 
@@ -108,3 +115,86 @@ def posterior_predict_pallas(
         interpret=interpret,
     )(x, z, inv_l, var, w, u, c_row)
     return mean[:, 0], fvar[:, 0]
+
+
+def _predict_slots_kernel_body(
+    x_ref, z_ref, invl_ref, var_ref, w_ref, u_ref, c_ref, mean_ref, fvar_ref
+):
+    x = x_ref[0]  # (bq, d): this (slot, q-block) grid cell's queries
+    z = z_ref[...]  # (m, d)
+    inv_l = invl_ref[...]  # (1, d)
+    xs = x * inv_l
+    zs = z * inv_l
+    diff = xs[:, None, :] - zs[None, :, :]
+    r2 = jnp.sum(diff * diff, axis=-1)  # (bq, m)
+    var = var_ref[0, 0]
+    knm = var * jnp.exp(-0.5 * r2)
+    mean_ref[0] = jnp.sum(knm * c_ref[...], axis=-1, keepdims=True)
+    lk = jax.lax.dot_general(
+        knm, w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),  # knm @ W^T
+        preferred_element_type=jnp.float32,
+    ).astype(knm.dtype)
+    su = jax.lax.dot_general(
+        knm, u_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),  # knm @ U^T
+        preferred_element_type=jnp.float32,
+    ).astype(knm.dtype)
+    fvar_ref[0] = (
+        var
+        - jnp.sum(lk * lk, axis=-1, keepdims=True)
+        + jnp.sum(su * su, axis=-1, keepdims=True)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def posterior_predict_slots_pallas(
+    hx: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    block_q: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """hx (S, Q, d) slot-stacked queries -> (mean (S, Q), fvar (S, Q)).
+
+    Grid = (S, Q // block_q): one launch covers every halo slot. The slot
+    axis only moves the query BlockSpec — z/W/U/c index maps are constant,
+    so the factors stay resident across the entire grid.
+
+    Caller contract: Q % block_q == 0, m % 128 == 0, and w/u/c ZERO-PADDED
+    outside the true m_true block (see module docstring).
+    """
+    S, Q, d = hx.shape
+    m, _ = z.shape
+    grid = (S, Q // block_q)
+    inv_l = jnp.exp(-log_lengthscale).reshape(1, d).astype(hx.dtype)
+    var = jnp.exp(log_variance).reshape(1, 1).astype(hx.dtype)
+    c_row = c.reshape(1, m).astype(hx.dtype)
+    mean, fvar = pl.pallas_call(
+        _predict_slots_kernel_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((m, d), lambda s, i: (0, 0)),
+            pl.BlockSpec((1, d), lambda s, i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda s, i: (0, 0)),
+            pl.BlockSpec((m, m), lambda s, i: (0, 0)),  # W resident across grid
+            pl.BlockSpec((m, m), lambda s, i: (0, 0)),  # U resident across grid
+            pl.BlockSpec((1, m), lambda s, i: (0, 0)),  # c resident across grid
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1), lambda s, i: (s, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda s, i: (s, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, Q, 1), hx.dtype),
+            jax.ShapeDtypeStruct((S, Q, 1), hx.dtype),
+        ],
+        interpret=interpret,
+    )(hx, z, inv_l, var, w, u, c_row)
+    return mean[..., 0], fvar[..., 0]

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
+import jax
 import jax.numpy as jnp
 
 
@@ -68,3 +69,22 @@ def posterior_predict(
     su = knm @ u.T
     fvar = jnp.exp(log_variance) - jnp.sum(lk * lk, axis=-1) + jnp.sum(su * su, axis=-1)
     return mean, fvar
+
+
+def posterior_predict_slots(
+    hx: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Slot-stacked ``posterior_predict``: hx (S, Q, d) -> (S, Q) pairs.
+
+    One model, S stacked query blocks (the serving program's 9 halo
+    slots) — the allclose target for the slot-stacked Pallas launch.
+    """
+    return jax.vmap(
+        lambda xs: posterior_predict(xs, z, log_lengthscale, log_variance, w, u, c)
+    )(hx)

@@ -10,24 +10,39 @@ replicated), queries are routed to their owning partition by
 pattern of ``repro.core.psvgp_spmd``, and NO all-gather of factors
 anywhere.
 
-Per request the device program does:
+Per request (the overlapped pipeline; serial mode runs the same stages
+back-to-back):
 
-  1. halo-exchange the routed query blocks: every device receives its 8
-     grid neighbors' (q_max, 2) query blocks (two ppermute rounds; the
-     blend stencil never reaches further — see ``routing.OFFSETS``),
-  2. evaluate the LOCAL cached posterior on all 9 blocks at once — one
-     batched ``posterior.predict_cached`` of (9*q_max, 2) points
-     (``use_pallas=True`` routes it through the fused Pallas prediction
-     kernel of ``repro.kernels.predict`` on TPU),
-  3. return each result block to the query's owner (the reverse halo:
-     slot k's result travels along offset k carrying the evaluation of the
-     slot 8-k block),
+  HOST, overlapped with the mesh evaluating the PREVIOUS request:
+  1. route the batch (``routing.build_routing_table``; q_max follows the
+     streaming high-water-mark policy ``routing.StreamingQMax``) and stack
+     each device's full 9-slot halo of query blocks
+     (``routing.make_halo_stacker``) — queries are host data, so the halo
+     ingest rides the dispatch-time host->device transfer and costs zero
+     mesh collectives,
+
+  DEVICE (``make_sharded_blend``):
+  2. evaluate the LOCAL cached posterior on all 9 stacked blocks at once —
+     ``posterior.predict_cached_slots``; with ``use_pallas`` that is ONE
+     fused Pallas launch whose grid spans (9 slots x q-blocks) with the
+     W/U/c factors resident in VMEM across the whole grid,
+  3. return each result block to the query's owner over the COMPOSED
+     1-hop reverse halo: a row exchange then a column exchange move all
+     8 neighbor results in 4 ppermutes total (diagonals ride the
+     composition; the PR-2 program paid 12 query hops out + 24 result
+     hops back),
   4. blend the 4 corner evaluations per query on the owning device
-     (``routing.blend_slots``).
+     (``routing.blend_slots``),
 
-Communication per request per device: 8 query blocks out + 8 result pairs
-back — O(q_max) floats to nearest neighbors only, independent of P. The
-factors, like the variational parameters during training, never move.
+  HOST:
+  5. only when the result is CONSUMED, block on the device values and
+     scatter them back to request order (``routing.scatter_results``) —
+     jax's async dispatch keeps step 1 of batch t+1 running while the
+     mesh is inside steps 2-4 of batch t (``pipelined_request_loop``).
+
+Communication per request per device: 4 nearest-neighbor collectives
+carrying 8 result pairs — O(q_max) floats, independent of P. The factors,
+like the variational parameters during training, never move.
 
 Usage (CPU dry-run; the grid is mapped one-partition-per-device onto
 gy x gx virtual host devices):
@@ -54,7 +69,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import posterior, routing
 from repro.core.partition import PartitionGrid
-from repro.gp.covariances import CovarianceParams
 from repro.core.psvgp_spmd import grid_matches_mesh, shift_perm
 from repro.runtime import compat
 from repro.sharding import gp_stacked_pspecs
@@ -114,21 +128,6 @@ def shard_cache(
     )
 
 
-def shard_table(table: routing.RoutingTable, mesh: Mesh):
-    """Device-place the routed query blocks a request actually ships:
-    (xq, corner_slot, corner_w), leading P axis over the mesh. qmask /
-    src_idx / counts stay host-side (they only drive the result scatter)."""
-    blocks = (
-        jnp.asarray(table.xq),
-        jnp.asarray(table.corner_slot),
-        jnp.asarray(table.corner_w),
-    )
-    specs = gp_stacked_pspecs(blocks, mesh)
-    return tuple(
-        jax.device_put(b, NamedSharding(mesh, s)) for b, s in zip(blocks, specs)
-    )
-
-
 def _make_shift(axes: Sequence[str], gx: int, gy: int) -> Callable:
     """Build ``shift(tree, dx, dy)`` usable INSIDE a shard_map over ``axes``:
     every device receives the payload of the device at grid offset
@@ -156,9 +155,10 @@ def _make_shift(axes: Sequence[str], gx: int, gy: int) -> Callable:
 
 def make_halo_gather(mesh: Mesh, axes: Sequence[str], grid: PartitionGrid):
     """Jitted (P, ...) -> (P, 9, ...) halo gather: output slot k on device p
-    is device p+OFFSETS[k]'s block (zeros off-grid). The standalone probe
-    of the exchange step 1 uses in serving — tests assert it resolves
-    corners exactly like ``routing.halo_ids``."""
+    is device p+OFFSETS[k]'s block (zeros off-grid). The standalone probe of
+    the ``shift`` semantics the serving program's reverse halo composes —
+    tests assert it resolves corners exactly like ``routing.halo_ids``, and
+    that the host-side ``routing.make_halo_stacker`` reproduces it."""
     if not grid_matches_mesh(grid, mesh, axes):
         raise ValueError(
             f"grid {grid.gx}x{grid.gy} must match mesh axes {tuple(axes)}"
@@ -181,12 +181,22 @@ def make_halo_gather(mesh: Mesh, axes: Sequence[str], grid: PartitionGrid):
     )
 
 
+def cache_in_specs(cache_like, pspec) -> posterior.PosteriorCache:
+    """shard_map in_specs for a P-stacked cache: every leaf carries
+    ``pspec`` on its leading partition axis, DERIVED from the pytree
+    structure of the cache actually served. Deriving (rather than
+    hand-building a spec literal field by field) means a future
+    ``PosteriorCache`` field can never desync the spec tree from the
+    value tree — the exact hazard the old literal carried."""
+    return jax.tree.map(lambda _: pspec, cache_like)
+
+
 def make_sharded_blend(
     mesh: Mesh,
     axes: Sequence[str],
     grid: PartitionGrid,
     cov_fn: Callable,
-    cache_like: posterior.PosteriorCache | None = None,
+    cache_like: posterior.PosteriorCache,
     *,
     use_pallas: bool = False,
 ):
@@ -195,18 +205,28 @@ def make_sharded_blend(
     Call signature of the returned function (leading P axis of every array
     sharded one partition per device):
 
-      blend_fn(cache, xq, corner_slot, corner_w) -> (mean, var)
+      blend_fn(cache, hx, corner_slot, corner_w) -> (mean, var)
 
-    with cache a P-stacked ``PosteriorCache``, xq (P, q_max, 2),
-    corner_slot (P, q_max, 4) int32, corner_w (P, q_max, 4), and outputs
-    (P, q_max) each — padded rows carry garbage (weight-0 blends) and are
-    dropped by ``routing.scatter_results``. Math identical to
+    with cache a P-stacked ``PosteriorCache``, hx (P, 9, q_max, 2) the
+    HOST-STACKED halo query blocks (``routing.make_halo_stacker``:
+    hx[p, k] = partition p+OFFSETS[k]'s block, zeros off-grid), corner_slot
+    (P, q_max, 4) int32, corner_w (P, q_max, 4), and outputs (P, q_max)
+    each — padded rows carry garbage (weight-0 blends) and are dropped by
+    ``routing.scatter_results``. Math identical to
     ``routing.predict_routed`` and, through it, ``blend.predict_blended``.
 
-    ``cache_like``: the cache that will be served (only its pytree
-    STRUCTURE is read, to build the shard_map in_specs) — pass it whenever
-    available so a future PosteriorCache field cannot desync the spec
-    tree; defaults to the current field layout.
+    The device program evaluates the local model on all 9 slots at once
+    (``posterior.predict_cached_slots``; one fused Pallas launch when
+    ``use_pallas`` — TPU only, validated RBF-only) and returns the results
+    over the COMPOSED reverse halo: slot k's evaluation must travel to the
+    owner at offset OFFSETS[k], and because a diagonal hop is an x-hop
+    then a y-hop, the whole 3x3 neighborhood moves in 4 ppermutes — one
+    row exchange (x-+, x+) of the slot-flipped results, one column
+    exchange (y-, y+) of the row-exchanged triples.
+
+    ``cache_like``: the cache that will be served; only its pytree
+    STRUCTURE is read (``cache_in_specs``) to build the shard_map
+    in_specs, so the spec tree can never desync from the cache layout.
     """
     if not grid_matches_mesh(grid, mesh, axes):
         raise ValueError(
@@ -215,52 +235,46 @@ def make_sharded_blend(
         )
     if grid.wrap_x:
         raise NotImplementedError("wrapped grids need ring perms for the halo")
-    shift = _make_shift(axes, grid.gx, grid.gy)
+    if use_pallas:
+        from repro.kernels import ops as kops
 
-    def step(cache, xq, corner_slot, corner_w):
+        kops.require_rbf(cov_fn)  # fail at build time, not trace time
+    shift = _make_shift(axes, grid.gx, grid.gy)
+    S = routing.NUM_HALO_SLOTS
+
+    def step(cache, hx, corner_slot, corner_w):
         local = jax.tree.map(lambda a: a[0], cache)  # this device's factors
-        x = xq[0]  # (q, d)
-        q, d = x.shape
-        # 1. halo in: slot k = queries owned by the device at offset k
-        halo = [
-            x if k == routing.SELF_SLOT else shift(x, dx, dy)
-            for k, (dx, dy) in enumerate(routing.OFFSETS)
-        ]
-        hx = jnp.stack(halo)  # (9, q, d)
-        # 2. one batched local evaluation of all nine blocks
-        mean, var = posterior.predict_cached(
-            local, cov_fn, hx.reshape(routing.NUM_HALO_SLOTS * q, d),
-            use_pallas=use_pallas,
+        h = hx[0]  # (9, q, d): slot k = queries owned by the device at offset k
+        q = h.shape[1]
+        # 1. one slot-stacked local evaluation of all nine blocks
+        mean, var = posterior.predict_cached_slots(
+            local, cov_fn, h, use_pallas=use_pallas
         )
-        mean = mean.reshape(routing.NUM_HALO_SLOTS, q)
-        var = var.reshape(routing.NUM_HALO_SLOTS, q)
-        # 3. halo out: this device's evaluation of the slot-(8-k) block
-        # travels along offset k, landing on the owner as "the model at
-        # offset k from me evaluated my queries".
-        res = []
-        for k, (dx, dy) in enumerate(routing.OFFSETS):
-            rk = routing.NUM_HALO_SLOTS - 1 - k  # reverse slot: -OFFSETS[k]
-            payload = (mean[rk], var[rk])
-            res.append(payload if k == routing.SELF_SLOT else shift(payload, dx, dy))
-        res_mean = jnp.stack([m for m, _ in res])  # (9, q)
-        res_var = jnp.stack([v for _, v in res])
-        # 4. 4-corner bilinear blend on the owning device
-        bmean, bvar = routing.blend_slots(res_mean, res_var, corner_slot[0], corner_w[0])
+        ev = jnp.stack([mean, var], axis=1)  # (9, 2, q): one halo payload
+        # 2. composed reverse halo. The owner at offset OFFSETS[k] needs MY
+        # evaluation of its queries, which sits in my slot 8-k; flipping
+        # the slot axis puts "what must travel along offset (dx, dy)" at
+        # halo position (dy+1, dx+1):
+        f = ev[::-1].reshape(3, 3, 2, q)  # f[dy+1, dx+1] travels along (dx, dy)
+        # row exchange: every column of the flipped stack moves its x-hop
+        g = jnp.stack(
+            [shift(f[:, 0], -1, 0), f[:, 1], shift(f[:, 2], 1, 0)], axis=1
+        )
+        # column exchange: row-exchanged triples move their y-hop
+        res = jnp.concatenate(
+            [shift(g[0], 0, -1)[None], g[1][None], shift(g[2], 0, 1)[None]]
+        ).reshape(S, 2, q)  # res[k] = model at offset k's evaluation of MY queries
+        # 3. 4-corner bilinear blend on the owning device
+        bmean, bvar = routing.blend_slots(
+            res[:, 0], res[:, 1], corner_slot[0], corner_w[0]
+        )
         return bmean[None], bvar[None]
 
     pspec = P(tuple(axes))
-    if cache_like is not None:
-        cache_specs = jax.tree.map(lambda _: pspec, cache_like)
-    else:
-        cache_specs = posterior.PosteriorCache(
-            z=pspec, w=pspec, u=pspec, c=pspec,
-            cov=CovarianceParams(log_lengthscale=pspec, log_variance=pspec),
-            log_beta=pspec,
-        )
     step_fn = compat.shard_map(
         step,
         mesh=mesh,
-        in_specs=(cache_specs, pspec, pspec, pspec),
+        in_specs=(cache_in_specs(cache_like, pspec), pspec, pspec, pspec),
         out_specs=(pspec, pspec),
         check_vma=False,
     )
@@ -304,12 +318,134 @@ def train_demo_surface(
     return ds, grid, data, static, state
 
 
+def make_request_stages(
+    grid: PartitionGrid,
+    blend_fn: Callable,
+    cache_sh: posterior.PosteriorCache,
+    *,
+    policy: routing.StreamingQMax | None = None,
+    q_max: int | None = None,
+):
+    """Split a request into the three pipeline stages the overlapped driver
+    schedules (and the serial driver runs back-to-back):
+
+      route(q)        HOST, pure numpy: bin the batch once
+                      (``owning_cells``), fit q_max (streaming policy or
+                      the fixed prepass value), build the table REUSING
+                      the binning, halo-stack the blocks. Returns
+                      (table, blocks). Deliberately NO device_put here: a
+                      put targets the same devices the PREVIOUS request is
+                      still executing on and serializes behind it, which
+                      would stall the overlapped pipeline for a full
+                      device window — the transfer happens at dispatch
+                      time inside ``submit`` instead.
+      submit(routed)  DEVICE: dispatch the shard_map program (host->device
+                      transfer + async dispatch) — returns without waiting
+                      for the result.
+      collect(pending) HOST: block on the device values and scatter them
+                      back to request order. The ONLY sync point.
+
+    Exactly one of ``policy`` (live stream) / ``q_max`` (whole-stream
+    prepass, ``fixed_q_max``) must be given.
+    """
+    if (policy is None) == (q_max is None):
+        raise ValueError("pass exactly one of policy= (streaming) or q_max= (fixed)")
+    stacker = routing.make_halo_stacker(grid)
+
+    def route(q):
+        pts = np.asarray(q, np.float32)
+        cells = routing.owning_cells(grid, pts)
+        if policy is not None:
+            counts = np.bincount(
+                cells[1] * grid.gx + cells[0], minlength=grid.num_partitions
+            )
+            qm = policy.fit(counts)
+        else:
+            qm = q_max
+        table = routing.build_routing_table(grid, pts, q_max=qm, cells=cells)
+        return table, (stacker(table.xq), table.corner_slot, table.corner_w)
+
+    def submit(routed):
+        table, (hx, cs, cw) = routed
+        mean, var = blend_fn(cache_sh, hx, cs, cw)  # transfer + async dispatch
+        return table, mean, var
+
+    def collect(pending):
+        table, mean, var = pending
+        jax.block_until_ready((mean, var))
+        return (
+            routing.scatter_results(table, np.asarray(mean)),
+            routing.scatter_results(table, np.asarray(var)),
+        )
+
+    return route, submit, collect
+
+
+def pipelined_request_loop(
+    route: Callable,
+    submit: Callable,
+    collect: Callable,
+    batches,
+    *,
+    warm: bool = True,
+    on_result: Callable | None = None,
+) -> Tuple[dict, float]:
+    """The overlapped serving measurement loop (double-buffered).
+
+    Batch t is submitted to the mesh, then batch t+1 is ROUTED ON THE HOST
+    while the device program runs — jax's async dispatch means ``submit``
+    returns without waiting for the result and the block happens only in
+    ``collect``, when the result is consumed. Results are bitwise
+    identical to the serial loop — scheduling never touches the math.
+
+    Per-request latency is the request's completion-to-completion SERVICE
+    interval: the wall time the pipeline spends on it once it reaches the
+    head of the queue (dispatch + device evaluation + result scatter).
+    Host routing does not appear in it — that is the point of the
+    overlap: it ran during the previous request's device window. The
+    serial loop (:func:`timed_request_loop`) pays route + dispatch +
+    device + scatter per request; the pipelined steady state pays
+    max(route, device-window) per request.
+
+    ``on_result(i, (mean, var))`` receives each scattered result (tests
+    and the benchmark equivalence gate use it).
+
+    Returns ({p50_ms, p95_ms, p99_ms}, points_per_s).
+    """
+    if warm:
+        collect(submit(route(batches[0])))
+    lat = []
+    t_all = time.time()
+    nxt = route(batches[0])
+    mark = time.time()  # pipeline idle: batch 0's service starts here
+    for i in range(len(batches)):
+        pending = submit(nxt)  # transfer + async dispatch: mesh starts batch i
+        if i + 1 < len(batches):
+            nxt = route(batches[i + 1])  # host routes i+1 under batch i
+        out = collect(pending)  # sync point: batch i consumed
+        if on_result is not None:
+            on_result(i, out)
+        now = time.time()
+        lat.append(now - mark)
+        mark = now
+    wall = time.time() - t_all
+    ms = np.sort(np.asarray(lat)) * 1e3
+    pct = {
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p95_ms": float(np.percentile(ms, 95)),
+        "p99_ms": float(np.percentile(ms, 99)),
+    }
+    return pct, sum(len(q) for q in batches) / wall
+
+
 def serve_sharded(args) -> dict:
     """Train, shard the cache over the mesh, and run the routed query loop.
 
     Mirrors ``serve.serve_gp`` (same flags) but serves from the distributed
-    cache; prints and returns the latency/throughput record, including an
-    allclose check against the replicated path on the first batch.
+    cache through the overlapped pipeline (``--gp-serial`` falls back to
+    the synchronous loop); prints and returns the latency/throughput
+    record, including an allclose check against the replicated path on the
+    first batch and the streaming-q_max policy counters.
     """
     ensure_host_devices(args.gp_grid * args.gp_grid)
 
@@ -340,34 +476,32 @@ def serve_sharded(args) -> dict:
         rng.uniform(lo, hi, (B, 2)).astype(np.float32)
         for _ in range(args.gp_requests)
     ]
-    # one fixed q_max across the request stream = one compile
-    q_max = fixed_q_max(grid, batches)
-
-    def answer(q):
-        table = routing.build_routing_table(grid, q, q_max=q_max)
-        xq, cs, cw = shard_table(table, mesh)
-        mean, var = blend_fn(cache_sh, xq, cs, cw)
-        jax.block_until_ready((mean, var))
-        return table, np.asarray(mean), np.asarray(var)
+    policy = routing.StreamingQMax()
+    route, submit, collect = make_request_stages(
+        grid, blend_fn, cache_sh, policy=policy
+    )
 
     # warmup + equivalence check against the replicated path
-    table0, m0, v0 = answer(batches[0])
+    m0, v0 = collect(submit(route(batches[0])))
     m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(batches[0]))
-    mean_err = float(np.abs(routing.scatter_results(table0, m0) - np.asarray(m_rep)).max())
-    var_err = float(np.abs(routing.scatter_results(table0, v0) - np.asarray(v_rep)).max())
+    mean_err = float(np.abs(m0 - np.asarray(m_rep)).max())
+    var_err = float(np.abs(v0 - np.asarray(v_rep)).max())
     print(f"sharded vs replicated on warmup batch: max|dmean|={mean_err:.2e} "
           f"max|dvar|={var_err:.2e}")
 
-    def full_answer(q):
-        table, mean, var = answer(q)
-        return routing.scatter_results(table, mean), routing.scatter_results(table, var)
-
     # already warmed: the equivalence check above compiled and ran batch 0
-    pct, qps = timed_request_loop(full_answer, batches, warm=False)
+    serial = getattr(args, "gp_serial", False)
+    if serial:
+        pct, qps = timed_request_loop(
+            lambda q: collect(submit(route(q))), batches, warm=False
+        )
+    else:
+        pct, qps = pipelined_request_loop(route, submit, collect, batches, warm=False)
     rec = {
         "mesh": f"{grid.gy}x{grid.gx}",
         "devices": mesh.size,
-        "q_max": q_max,
+        "mode": "serial" if serial else "pipelined",
+        "qmax_policy": policy.stats(),
         "latency_ms": pct,
         "points_per_s": qps,
         "mean_err_vs_replicated": mean_err,
@@ -375,7 +509,9 @@ def serve_sharded(args) -> dict:
         "cache_bytes_total": total_b,
         "cache_bytes_per_device": device_b,
     }
-    print(f"served {args.gp_requests} requests x {B} points")
+    print(f"served {args.gp_requests} requests x {B} points "
+          f"({rec['mode']}; q_max={policy.q_max}, "
+          f"{policy.compiles} compiles, {policy.overflows} overflows)")
     print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
           f"p95={pct['p95_ms']:.2f} p99={pct['p99_ms']:.2f}")
     print(f"throughput: {qps:,.0f} points/s")
@@ -383,9 +519,11 @@ def serve_sharded(args) -> dict:
 
 
 def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> Tuple[dict, float]:
-    """The ONE serving measurement loop (shared by ``serve --gp``,
-    ``serve --gp --sharded`` and ``benchmarks.bench_serve``, so their SLO
-    reports stay comparable): warm up on batches[0] (compile), then time
+    """The SERIAL serving measurement loop (shared by ``serve --gp``, the
+    ``--gp-serial`` sharded mode and ``benchmarks.bench_serve``'s
+    replicated + serial lanes, so their SLO reports stay comparable; the
+    overlapped counterpart is :func:`pipelined_request_loop`): warm up on
+    batches[0] (compile), then time
     each request end to end. Pass ``warm=False`` when the caller already
     ran a batch through ``answer`` (e.g. for an equivalence check) — the
     program is compiled and a second warmup pass would just burn a
@@ -411,19 +549,40 @@ def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> Tuple
     return pct, sum(len(q) for q in batches) / wall
 
 
+def prepass_routing(
+    grid: PartitionGrid, batches, *, headroom: float = 1.25, pad_multiple: int = 8
+) -> Tuple[int, list]:
+    """Whole-stream q_max prepass, for streams known up front (benchmarks,
+    batch jobs): one q_max covering every batch = single compile, the
+    observed max bucket count with headroom, rounded with the SAME
+    alignment rule ``routing.build_routing_table`` applies (pass the same
+    ``pad_multiple`` to both, or the table re-rounds and recompiles).
+
+    Returns (q_max, cells) where ``cells[i]`` is ``owning_cells`` for
+    ``batches[i]`` — pass it into ``build_routing_table(..., cells=...)``
+    so the binning this prepass already did is not repeated per request
+    (it used to be: the prepass binned every batch, threw the result away,
+    and the table re-binned on the serving critical path). Live streams
+    should use ``routing.StreamingQMax`` instead — this prepass cannot see
+    batches that have not arrived yet.
+    """
+    need, cells = 1, []
+    for q in batches:
+        ix, iy = routing.owning_cells(grid, np.asarray(q, np.float32))
+        cells.append((ix, iy))
+        c = np.bincount(iy * grid.gx + ix, minlength=grid.num_partitions)
+        need = max(need, int(c.max()))
+    return routing.ceil_to(int(np.ceil(need * headroom)), pad_multiple), cells
+
+
 def fixed_q_max(
     grid: PartitionGrid, batches, *, headroom: float = 1.25, pad_multiple: int = 8
 ) -> int:
-    """One q_max covering every batch in a request stream (single compile):
-    the observed max bucket count with headroom, rounded up with the SAME
-    alignment rule ``routing.build_routing_table`` applies (pass the same
-    ``pad_multiple`` to both, or the table re-rounds and recompiles)."""
-    need = 1
-    for q in batches:
-        ix, iy = routing.owning_cells(grid, np.asarray(q, np.float32))
-        c = np.bincount(iy * grid.gx + ix, minlength=grid.num_partitions)
-        need = max(need, int(c.max()))
-    return routing.ceil_to(int(np.ceil(need * headroom)), pad_multiple)
+    """``prepass_routing`` when only the q_max is wanted (the cells are
+    discarded — callers on the serving path should take both)."""
+    return prepass_routing(
+        grid, batches, headroom=headroom, pad_multiple=pad_multiple
+    )[0]
 
 
 def cache_memory_bytes(cache: posterior.PosteriorCache) -> Tuple[int, int]:
@@ -448,6 +607,9 @@ def add_gp_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--gp-train-iters", type=int, default=200)
     ap.add_argument("--gp-batch", type=int, default=2048, help="query points per request")
     ap.add_argument("--gp-requests", type=int, default=50)
+    ap.add_argument("--gp-serial", action="store_true",
+                    help="sharded mode: run the synchronous request loop "
+                         "instead of the overlapped (double-buffered) pipeline")
 
 
 def main() -> None:

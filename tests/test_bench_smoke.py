@@ -1,0 +1,50 @@
+"""Serving-benchmark smoke lane (default pytest run, `smoke` marker).
+
+Runs ``benchmarks.bench_serve --smoke`` — the full rebuilt pipeline
+(train, shard, serial + pipelined + fused lanes, equivalence gates) on a
+3x3 mesh in seconds — so a pipeline regression fails the tier-1 run, not
+just the next full benchmark refresh. ``make bench-serve-smoke`` runs the
+same thing by hand. Needs a subprocess: the benchmark forces virtual host
+devices before jax initializes.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.smoke
+def test_bench_serve_smoke(tmp_path):
+    out = tmp_path / "BENCH_serve_smoke.json"
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_serve", "--smoke", "--out", str(out)],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    rec = json.loads(out.read_text())
+
+    # every lane present and sane
+    for lane in ("replicated", "sharded_serial", "sharded_pipelined",
+                 "sharded_pipelined_fused"):
+        assert rec[lane]["p50_ms"] > 0, lane
+        assert rec[lane]["points_per_s"] > 0, lane
+
+    # the hard gates the full-size benchmark is held to
+    eq = rec["equivalence"]
+    assert eq["atol_1e5_ok"], eq
+    assert eq["pipelined_bitwise_serial"], "pipelining changed the math"
+    assert eq["fused_vs_jnp_max_abs_err_mean"] <= 1e-4, eq
+    assert eq["fused_vs_jnp_max_abs_err_var"] <= 1e-4, eq
+
+    # structure the README/architecture docs cite
+    assert rec["sharded_serial"]["cache_shard_ratio"] == rec["P"]
+    pol = rec["sharded_pipelined"]["qmax_policy"]
+    assert pol["q_max"] > 0 and pol["compiles"] >= 1
+    assert rec["speedup"]["pipelined_vs_serial_p50"] > 0
+    # the PR-2 cross-run comparison is only valid on its own 16x16 shape
+    assert "baseline" not in rec and "serial_vs_pr2_p50" not in rec["speedup"]

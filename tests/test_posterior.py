@@ -101,6 +101,89 @@ def test_predict_cached_pallas_path_matches_jnp():
     np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_j), atol=1e-5)
 
 
+@pytest.mark.parametrize("S,Q,md", [(1, 8, (5, 2)), (9, 24, (12, 2)),
+                                    (9, 130, (25, 2)), (3, 7, (128, 3))])
+def test_pallas_slots_kernel_matches_ref(S, Q, md):
+    """Slot-stacked fused kernel vs jnp reference through the
+    padding/dispatch layer, incl. ragged (non-tile-aligned) S/Q/m."""
+    m, d = md
+    ks = jax.random.split(jax.random.PRNGKey(S * 100 + Q), 2)
+    cfg, params = _model(ks[0], m=m, d=d)
+    cov_fn = make_covariance("rbf")
+    cache = posterior.build_cache(params, cov_fn)
+    hx = jax.random.uniform(ks[1], (S, Q, d), minval=-2, maxval=2)
+    args = (hx, cache.z, cache.cov.log_lengthscale, cache.cov.log_variance,
+            cache.w, cache.u, cache.c)
+    mean_k, var_k = ops.posterior_predict_slots(*args)
+    mean_r, var_r = ops.posterior_predict_slots_ref(*args)
+    assert mean_k.shape == (S, Q) and var_k.shape == (S, Q)
+    np.testing.assert_allclose(np.asarray(mean_k), np.asarray(mean_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(var_k), np.asarray(var_r), atol=1e-5)
+
+
+def test_pallas_slots_kernel_on_halo_stacked_blocks():
+    """The kernel's real serving input: halo-stacked blocks from a routing
+    table, including edge/corner partitions whose off-grid slots are
+    zero-filled, and a ragged q_max."""
+    from repro.core import routing
+    from repro.core.partition import make_grid
+
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(-1.0, 1.0, size=(300, 2)).astype(np.float32)
+    grid = make_grid(pts, 4, 3)
+    table = routing.build_routing_table(grid, pts)
+    hx_all = routing.make_halo_stacker(grid)(table.xq)  # (P, 9, q, 2)
+
+    cfg, params = _model(jax.random.PRNGKey(3), m=10, d=2)
+    cov_fn = make_covariance("rbf")
+    cache = posterior.build_cache(params, cov_fn)
+    # corner (0), edge (1), interior (center of the 4x3 grid)
+    for p in (0, 1, grid.index_of(1, 1)):
+        hx = jnp.asarray(hx_all[p])
+        m_j, v_j = posterior.predict_cached_slots(cache, cov_fn, hx)
+        m_p, v_p = posterior.predict_cached_slots(cache, cov_fn, hx, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(m_p), np.asarray(m_j), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(v_p), np.asarray(v_j), atol=1e-5)
+
+
+def test_predict_cached_slots_jnp_is_per_slot_predict_cached():
+    """The slot stack is a pure batching: slot k's row equals a plain
+    predict_cached call on that block (bitwise, same code path)."""
+    cfg, params = _model(jax.random.PRNGKey(4))
+    cov_fn = make_covariance("rbf")
+    cache = posterior.build_cache(params, cov_fn)
+    hx = jax.random.uniform(jax.random.PRNGKey(8), (9, 16, 2), minval=-2, maxval=2)
+    ms, vs = posterior.predict_cached_slots(cache, cov_fn, hx, include_noise=True)
+    for k in (0, 4, 8):
+        m1, v1 = posterior.predict_cached(cache, cov_fn, hx[k], include_noise=True)
+        np.testing.assert_allclose(np.asarray(ms[k]), np.asarray(m1), atol=1e-7)
+        np.testing.assert_allclose(np.asarray(vs[k]), np.asarray(v1), atol=1e-7)
+
+
+@pytest.mark.parametrize("covariance", ["matern32", "matern52"])
+def test_pallas_paths_reject_non_rbf(covariance):
+    """use_pallas with a non-RBF covariance must raise, not silently
+    return RBF answers — on every cached-prediction entry point."""
+    cfg, params = _model(jax.random.PRNGKey(5), covariance=covariance)
+    cov_fn = make_covariance(covariance)
+    cache = posterior.build_cache(params, cov_fn)
+    xs = jax.random.uniform(jax.random.PRNGKey(9), (16, 2), minval=-2, maxval=2)
+    with pytest.raises(ValueError, match="rbf"):
+        posterior.predict_cached(cache, cov_fn, xs, use_pallas=True)
+    with pytest.raises(ValueError, match="rbf"):
+        posterior.predict_cached_slots(
+            cache, cov_fn, xs[None].repeat(9, axis=0), use_pallas=True
+        )
+    stacked = jax.tree.map(lambda a: jnp.stack([a, a]), cache)
+    with pytest.raises(ValueError, match="rbf"):
+        posterior.predict_cached_stacked(
+            stacked, cov_fn, jnp.stack([xs, xs]), use_pallas=True
+        )
+    # the jnp path keeps serving every covariance
+    m_j, v_j = posterior.predict_cached(cache, cov_fn, xs)
+    assert np.isfinite(np.asarray(m_j)).all() and (np.asarray(v_j) > 0).all()
+
+
 @pytest.fixture(scope="module")
 def trained_psvgp():
     ds = e3sm_like_field(n=2500, seed=0)

@@ -102,6 +102,100 @@ def test_routing_table_overflow_and_padding():
         np.testing.assert_allclose(t.xq[p, -1], [cx, cy], rtol=1e-6)
 
 
+def test_routing_table_cells_passthrough():
+    """Precomputed cells (the q_max policies bin the batch before building
+    the table) must produce a table identical to in-place binning — every
+    field, bitwise."""
+    grid, pts = _grid_and_queries()
+    cells = routing.owning_cells(grid, pts)
+    t0 = routing.build_routing_table(grid, pts)
+    t1 = routing.build_routing_table(grid, pts, cells=cells)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError, match="cells"):
+        routing.build_routing_table(grid, pts, cells=(cells[0][:5], cells[1][:5]))
+
+
+def test_streaming_qmax_policy():
+    """High-water mark semantics: one compile for a steady stream, growth
+    only on overflow, headroom + alignment on every growth."""
+    pol = routing.StreamingQMax(headroom=1.25, pad_multiple=8)
+    q1 = pol.fit(np.array([10, 3, 0]))
+    assert q1 == routing.ceil_to(int(np.ceil(10 * 1.25)), 8) == 16
+    assert pol.stats() == {"q_max": 16, "compiles": 1, "overflows": 0}
+    # anything under the mark: no shape change, no recompile
+    for c in ([12, 9], [16, 16], [1, 0]):
+        assert pol.fit(np.array(c)) == 16
+    assert pol.stats() == {"q_max": 16, "compiles": 1, "overflows": 0}
+    # an overflowing batch grows the mark (and is counted)
+    q2 = pol.fit(np.array([40]))
+    assert q2 == routing.ceil_to(50, 8) == 56
+    assert pol.stats() == {"q_max": 56, "compiles": 2, "overflows": 1}
+    # empty batch never shrinks or breaks the mark
+    assert pol.fit(np.array([])) == 56
+    with pytest.raises(ValueError):
+        routing.StreamingQMax(headroom=0.5)
+
+
+def test_streaming_qmax_recompile_count_bounded():
+    """Regression: an adversarial monotonically-growing stream must cost
+    O(log(peak/first)) recompiles, not one per batch — the multiplicative
+    headroom is what bounds the device-program recompiles on a live
+    stream."""
+    pol = routing.StreamingQMax(headroom=1.25, pad_multiple=8)
+    needs = np.unique(np.geomspace(8, 4096, 200).astype(int))  # every batch grows
+    for n in needs:
+        pol.fit(np.array([n]))
+    bound = int(np.ceil(np.log(4096 / 8) / np.log(1.25))) + 2
+    assert pol.compiles <= bound, (pol.compiles, bound)
+    assert pol.q_max >= 4096
+    # steady stream at the peak: zero further compiles
+    before = pol.compiles
+    for _ in range(50):
+        pol.fit(np.array([4096]))
+    assert pol.compiles == before
+
+
+def test_prepass_returns_reusable_cells():
+    """The whole-stream prepass hands back its binning so the serving loop
+    never re-bins (the PR-2 hot path binned every batch twice)."""
+    from repro.launch import serve_sharded as ss
+
+    grid, pts = _grid_and_queries()
+    batches = [pts[:200], pts[200:500], pts[500:]]
+    q_max, cells = ss.prepass_routing(grid, batches)
+    assert q_max == ss.fixed_q_max(grid, batches)
+    assert len(cells) == len(batches)
+    for q, c in zip(batches, cells):
+        ix, iy = routing.owning_cells(grid, q)
+        np.testing.assert_array_equal(c[0], ix)
+        np.testing.assert_array_equal(c[1], iy)
+        t0 = routing.build_routing_table(grid, q, q_max=q_max)
+        t1 = routing.build_routing_table(grid, q, q_max=q_max, cells=c)
+        np.testing.assert_array_equal(t0.xq, t1.xq)
+
+
+def test_halo_stacker_matches_halo_ids():
+    """The host-side halo ingest: hx[p, k] is partition p+OFFSETS[k]'s
+    block on-grid and zeros off-grid — exactly what a mesh-side ppermute
+    exchange would deliver (the SPMD probe in test_serve_sharded asserts
+    the same contract against the real collective)."""
+    grid, pts = _grid_and_queries(gx=4, gy=3, n=217)
+    table = routing.build_routing_table(grid, pts)
+    hx = routing.make_halo_stacker(grid)(table.xq)
+    P_, q = table.num_partitions, table.q_max
+    assert hx.shape == (P_, routing.NUM_HALO_SLOTS, q, 2)
+    hids = routing.halo_ids(grid)
+    on = routing.halo_slot_on_grid(grid)
+    for p in range(P_):
+        ix, iy = grid.cell_of(p)
+        for k, (dx, dy) in enumerate(routing.OFFSETS):
+            on_grid = 0 <= ix + dx < grid.gx and 0 <= iy + dy < grid.gy
+            assert on[p, k] == (1.0 if on_grid else 0.0)
+            want = table.xq[hids[p, k]] if on_grid else np.zeros((q, 2), np.float32)
+            np.testing.assert_array_equal(hx[p, k], want)
+
+
 def test_predict_routed_matches_predict_blended():
     """The routed (sharded-math) serving path == the replicated blend on a
     trained model — the single-host half of the distributed-equivalence

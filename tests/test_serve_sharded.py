@@ -5,12 +5,21 @@ devices configured before jax initializes, so the checks run in one
 subprocess with its own XLA_FLAGS. Covered there:
 
   * halo exchange resolves corners exactly (probe payload = partition id,
-    compared against routing.halo_ids — the SPMD corner-resolution test);
+    compared against routing.halo_ids — the SPMD corner-resolution test),
+    and the HOST-side halo stacker reproduces the mesh-side gather
+    bitwise (the ingest the serving program now uses for queries);
   * sharded blend == predict_routed reference == replicated
-    predict_blended to atol 1e-5 on the same trained state;
+    predict_blended to atol 1e-5 on the same trained state — through the
+    pipeline stages the production driver uses;
+  * pipelined loop == serial loop BITWISE on the same request stream
+    (overlap is scheduling, never math), with the streaming q_max policy;
+  * the fused slot-stacked Pallas program (use_pallas=True, interpret on
+    CPU) matches the jnp program to 1e-5 inside the same shard_map;
   * per-device cache-factor memory is exactly 1/P of replicated;
-  * the lowered program contains collective-permutes and NO all-gather of
-    the cache factors (the decentralized-serving claim).
+  * the lowered program contains collective-permutes — few of them: the
+    composed reverse halo is 4, not the 36 per-slot hops of the old
+    program — and NO all-gather of the cache factors (the
+    decentralized-serving claim).
 """
 import os
 import subprocess
@@ -54,21 +63,28 @@ _SCRIPT = textwrap.dedent(
             want = float(hids[p, k]) if on_grid else 0.0
             assert halo[p, k] == want, (p, k, halo[p, k], want)
 
-    # --- sharded == routed reference == replicated ---
+    # --- the host-side halo stacker delivers bitwise what the mesh-side
+    # exchange would (the serving ingest replaces the query ppermutes)
+    stacked = routing.make_halo_stacker(grid)(np.asarray(pid)[:, None, :])
+    np.testing.assert_array_equal(stacked[:, :, 0, 0], halo)
+
+    # --- sharded == routed reference == replicated, via the production
+    # pipeline stages ---
     cache_sh = ss.shard_cache(cache, mesh)
     total_b, device_b = ss.cache_memory_bytes(cache_sh)
     assert total_b == device_b * grid.num_partitions, (total_b, device_b)
 
     rng = np.random.default_rng(1)
     lo, hi = np.asarray(ds.x).min(0), np.asarray(ds.x).max(0)
-    q = rng.uniform(lo, hi, (777, 2)).astype(np.float32)
-    table = routing.build_routing_table(grid, q)
-    xq, cs, cw = ss.shard_table(table, mesh)
+    batches = [rng.uniform(lo, hi, (n, 2)).astype(np.float32)
+               for n in (777, 400, 777, 1200)]
+    q = batches[0]
     blend_fn = ss.make_sharded_blend(mesh, mesh.axis_names, grid, static.cov_fn, cache_sh)
-    mean, var = blend_fn(cache_sh, xq, cs, cw)
-    m_sh = routing.scatter_results(table, np.asarray(mean))
-    v_sh = routing.scatter_results(table, np.asarray(var))
+    route, submit, collect = ss.make_request_stages(
+        grid, blend_fn, cache_sh, policy=routing.StreamingQMax())
+    m_sh, v_sh = collect(submit(route(q)))
 
+    table = routing.build_routing_table(grid, q)
     m_rt, v_rt = routing.predict_routed(cache, static.cov_fn, grid, table)
     m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
     np.testing.assert_allclose(m_sh, m_rt, atol=1e-5)
@@ -76,11 +92,39 @@ _SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(m_sh, np.asarray(m_rep), atol=1e-5)
     np.testing.assert_allclose(v_sh, np.asarray(v_rep), atol=1e-5)
 
-    # --- the program must be halo-shaped: collective-permute yes,
-    # all-gather of factors no ---
-    txt = blend_fn.lower(cache_sh, xq, cs, cw).as_text()
-    assert ("collective_permute" in txt) or ("collective-permute" in txt), \
-        "no collective-permute in the lowered serving program"
+    # --- pipelined == serial BITWISE on the same stream (fresh policies
+    # so both see the identical q_max sequence) ---
+    route_s, submit_s, collect_s = ss.make_request_stages(
+        grid, blend_fn, cache_sh, policy=routing.StreamingQMax())
+    serial = [collect_s(submit_s(route_s(b))) for b in batches]
+    route_p, submit_p, collect_p = ss.make_request_stages(
+        grid, blend_fn, cache_sh, policy=routing.StreamingQMax())
+    piped = {}
+    ss.pipelined_request_loop(route_p, submit_p, collect_p, batches,
+                              warm=False, on_result=lambda i, o: piped.setdefault(i, o))
+    for i, (ms, vs) in enumerate(serial):
+        np.testing.assert_array_equal(piped[i][0], ms)
+        np.testing.assert_array_equal(piped[i][1], vs)
+
+    # --- fused slot-stacked Pallas program (interpret on CPU) matches the
+    # jnp program inside the same shard_map ---
+    blend_fu = ss.make_sharded_blend(
+        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=True)
+    route_f, submit_f, collect_f = ss.make_request_stages(
+        grid, blend_fu, cache_sh, policy=routing.StreamingQMax())
+    m_fu, v_fu = collect_f(submit_f(route_f(q)))
+    np.testing.assert_allclose(m_fu, m_sh, atol=1e-5)
+    np.testing.assert_allclose(v_fu, v_sh, atol=1e-5)
+
+    # --- the program must be halo-shaped: a handful of collective-permutes
+    # (composed reverse halo = 4 hops; the per-slot program had 36) and no
+    # all-gather of the factors ---
+    stacker = routing.make_halo_stacker(grid)
+    hx = stacker(table.xq)
+    txt = blend_fn.lower(cache_sh, hx, table.corner_slot, table.corner_w).as_text()
+    ncp = txt.count("collective-permute(") + txt.count("collective_permute")
+    assert ncp > 0, "no collective-permute in the lowered serving program"
+    assert ncp <= 8, f"reverse halo must stay composed (4 hops), found {ncp}"
     assert "all-gather" not in txt and "all_gather" not in txt, \
         "serving program gathers state — the cache must stay sharded"
     print("OK")
@@ -95,7 +139,7 @@ def test_sharded_serving_matches_replicated():
     r = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, env=env,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        timeout=600,
+        timeout=900,
     )
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK" in r.stdout
