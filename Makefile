@@ -1,7 +1,7 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check bench-predict bench-serve bench-serve-smoke
+.PHONY: test test-full docs-check lint bench-predict bench-serve bench-serve-smoke bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
@@ -12,6 +12,13 @@ test-full:       ## everything, including the slow SPMD/dry-run lane
 docs-check:      ## README + docs/ commands and snippets must run as written
 	$(PY) -m pytest -q -m docs
 
+lint:            ## ruff over the whole repo (config in pyproject.toml)
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check . ; \
+	else \
+		echo "ruff not installed — skipping locally (CI enforces it: pip install ruff)"; \
+	fi
+
 bench-predict:   ## cached-prediction speedup report -> BENCH_predict.json
 	$(PY) -m benchmarks.bench_predict
 
@@ -20,3 +27,7 @@ bench-serve:     ## replicated-vs-sharded serving SLO report -> BENCH_serve.json
 
 bench-serve-smoke: ## seconds-scale serving pipeline smoke (3x3 mesh; also runs in tier-1 via the smoke marker)
 	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
+
+bench-gate:      ## bench-serve-smoke + p50 regression gate vs the checked-in baseline
+	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
+	$(PY) -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json

@@ -22,7 +22,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.configs.psvgp_e3sm import FULL as E3SM
 from repro.core import psvgp, svgp

@@ -17,7 +17,17 @@ sharded path measured in all three of its regimes:
   * sharded pipelined fused — same, with the slot-stacked Pallas predict
     kernel (``use_pallas=True``). On CPU the kernel runs in INTERPRET
     mode, so its latency lane is informative only there (and runs a
-    shortened stream); on TPU it is the production configuration.
+    shortened stream); on TPU it is the production configuration;
+  * skew lanes (``--skew zipf``, the default) — a zipf-skewed query
+    stream (``repro.data.spatial.zipf_query_stream``) served twice
+    through the pipelined driver: once with the single-level
+    ``StreamingQMax`` router (every device block pads to the hottest
+    cell) and once with the two-level ``TwoLevelQMax`` router (hot-cell
+    overflow spills onto corner-cell neighbors). Reports p50/p99 and the
+    padded-row waste of each, the waste-reduction ratio (the acceptance
+    gate: >= 2x), the spill counts, plus the same equivalence gates —
+    two-level vs replicated atol 1e-5, two-level pipelined bitwise ==
+    serial.
 
 Reports p50/p95/p99 request latency and points/s throughput per lane, the
 sharded-vs-replicated allclose gate (atol 1e-5), pipelined-vs-serial
@@ -55,6 +65,8 @@ def run(
     batch: int = 2048,
     requests: int = 32,
     fused_requests: int | None = None,
+    skew: str = "zipf",
+    skew_alpha: float = 1.1,
     out_path: str = "BENCH_serve.json",
 ) -> dict:
     # virtual devices must be forced before any jax computation
@@ -175,6 +187,102 @@ def run(
         route_f, submit_f, collect_f, fused_stream, warm=False
     )
 
+    # ---- skew lanes: single-level vs two-level router under zipf ---------
+    skew_rec = None
+    if skew == "zipf":
+        from repro.data.spatial import zipf_query_stream
+
+        zbatches = zipf_query_stream(
+            grid, batch, requests, alpha=skew_alpha, seed=7
+        )
+
+        def instrumented_stages(policy):
+            """Pipeline stages + per-table waste/spill accounting. The
+            warm pass compiles through the same stages, so counters are
+            zeroed after warmup and the stats cover the measured stream
+            exactly once."""
+            route0, submit0, collect0 = ss.make_request_stages(
+                grid, blend_fn, cache_sh, policy=policy
+            )
+            stat = {"waste_rows": 0, "spilled": 0}
+
+            def route(q):
+                table, blocks = route0(q)
+                stat["waste_rows"] += table.waste_rows()
+                stat["spilled"] += table.num_spilled()
+                return table, blocks
+
+            return route, submit0, collect0, stat
+
+        def skew_lane(policy):
+            route, submit, collect, stat = instrumented_stages(policy)
+            results = {}
+            collect(submit(route(zbatches[0])))  # warm/compile
+            stat.update(waste_rows=0, spilled=0)
+            pct, qps = ss.pipelined_request_loop(
+                route, submit, collect, zbatches, warm=False,
+                on_result=lambda i, out: results.setdefault(i, out),
+            )
+            return pct, qps, stat, results
+
+        pol_z1 = routing.StreamingQMax()
+        pct_z1, qps_z1, stat_z1, res_z1 = skew_lane(pol_z1)
+        pol_z2 = routing.TwoLevelQMax()
+        pct_z2, qps_z2, stat_z2, res_z2 = skew_lane(pol_z2)
+
+        # the routers place queries differently, so only scatter-level
+        # equality is meaningful: identical answers per request position
+        z_router_err = max(
+            float(np.abs(res_z2[i][j] - res_z1[i][j]).max())
+            for i in range(len(zbatches)) for j in (0, 1)
+        )
+        # two-level vs replicated on the first skewed batch
+        mz, vz = res_z2[0]
+        mz_rep, vz_rep = predict_blended(
+            static, state, grid, jnp.asarray(zbatches[0]), cache=cache
+        )
+        z_mean_err = float(np.abs(mz - np.asarray(mz_rep)).max())
+        z_var_err = float(np.abs(vz - np.asarray(vz_rep)).max())
+        # two-level pipelined bitwise == two-level serial (fresh policy ->
+        # identical q_max trajectory)
+        route_zs, submit_zs, collect_zs = ss.make_request_stages(
+            grid, blend_fn, cache_sh, policy=routing.TwoLevelQMax()
+        )
+        z_bitwise = all(
+            np.array_equal(out[j], res_z2[i][j])
+            for i, out in enumerate(
+                collect_zs(submit_zs(route_zs(b))) for b in zbatches
+            )
+            for j in (0, 1)
+        )
+        skew_rec = {
+            "alpha": skew_alpha,
+            "requests": len(zbatches),
+            # the lane-level "spilled" counts the MEASURED stream only (the
+            # policy's own cumulative total also includes the warm batch,
+            # so it is dropped from the nested record — one number per fact)
+            "single_level": {
+                **pct_z1, "points_per_s": qps_z1, **stat_z1,
+                "qmax_policy": pol_z1.stats(),
+            },
+            "two_level": {
+                **pct_z2, "points_per_s": qps_z2, **stat_z2,
+                "qmax_policy": {
+                    k: v for k, v in pol_z2.stats().items() if k != "spilled"
+                },
+            },
+            "waste_reduction_vs_single": (
+                stat_z1["waste_rows"] / max(stat_z2["waste_rows"], 1)
+            ),
+            "equivalence": {
+                "two_level_vs_single_max_abs_err": z_router_err,
+                "max_abs_err_mean_vs_replicated": z_mean_err,
+                "max_abs_err_var_vs_replicated": z_var_err,
+                "atol_1e5_ok": bool(z_mean_err <= 1e-5 and z_var_err <= 1e-5),
+                "pipelined_bitwise_serial": bool(z_bitwise),
+            },
+        }
+
     rec = {
         "P": grid.num_partitions,
         "m": m,
@@ -217,6 +325,7 @@ def run(
         "speedup": {
             "pipelined_vs_serial_p50": pct_serial["p50_ms"] / pct_pipe["p50_ms"],
         },
+        "skew": skew_rec,
     }
     if grid_side == 16 and m == 8 and batch == 2048:
         # the PR-2 baseline was recorded on exactly this configuration —
@@ -237,16 +346,26 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale shapes (3x3 mesh) — the regression "
                          "smoke lane (make bench-serve-smoke)")
+    ap.add_argument("--skew", choices=("zipf", "none"), default="zipf",
+                    help="also serve a zipf-skewed stream through the "
+                         "single-level AND two-level routers, reporting "
+                         "padded-row waste and p50/p99 per router "
+                         "(default: zipf)")
+    ap.add_argument("--skew-alpha", type=float, default=1.1,
+                    help="zipf exponent of the skewed stream's cell "
+                         "popularity (higher = hotter hot cells)")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args()
     if args.smoke:
         run(grid_side=3, m=5, n_train=1200, train_iters=150, batch=128,
-            requests=6, fused_requests=2, out_path=args.out)
+            requests=6, fused_requests=2, skew=args.skew,
+            skew_alpha=args.skew_alpha, out_path=args.out)
     elif args.quick:
         run(grid_side=4, m=6, n_train=4000, train_iters=200, batch=512,
-            requests=10, out_path=args.out)
+            requests=10, skew=args.skew, skew_alpha=args.skew_alpha,
+            out_path=args.out)
     else:
-        run(out_path=args.out)
+        run(skew=args.skew, skew_alpha=args.skew_alpha, out_path=args.out)
 
 
 if __name__ == "__main__":

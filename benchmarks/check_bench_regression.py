@@ -1,0 +1,120 @@
+"""Bench regression gate: compare a fresh ``bench_serve --smoke`` report
+against the checked-in baseline and FAIL on a large p50 regression.
+
+CI runs this after ``make bench-serve-smoke`` (``make bench-gate`` is the
+one-shot lane) so the serving pipeline's latency trajectory is enforced
+per-PR, not just observed whenever someone refreshes the full benchmark.
+
+The tolerance is deliberately loose — 2x per gated lane — because the
+smoke shapes run on whatever machine CI hands us and absolute
+milliseconds vary run to run; the gate exists to catch the step-function
+regressions (an accidental sync point, a per-request recompile, a routing
+path gone quadratic), which blow straight through 2x. Equivalence flags
+in the report are re-asserted here too: a benchmark that went numerically
+wrong must fail the gate even if it got faster.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json
+
+Refresh the baseline (after an intentional perf change, commit the diff):
+
+  PYTHONPATH=src python -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baselines", "serve_smoke.json")
+
+# lanes whose p50 the gate holds (path into the report, lane label)
+GATED_LANES = (
+    ("replicated", "replicated"),
+    ("sharded_serial", "sharded serial"),
+    ("sharded_pipelined", "sharded pipelined"),
+)
+MAX_REGRESSION = 2.0  # x over baseline p50
+# Sub-millisecond lanes (replicated smoke p50 is ~0.6 ms) can exceed 2x on
+# a slower CI machine generation through clock speed alone; a real
+# step-function regression also moves absolute time, so the gate requires
+# BOTH the ratio and an absolute excursion before failing.
+ABS_SLACK_MS = 5.0
+
+
+def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = False) -> int:
+    with open(report_path) as f:
+        rec = json.load(f)
+
+    failures = []
+    eq = rec.get("equivalence", {})
+    if not eq.get("atol_1e5_ok"):
+        failures.append(f"equivalence gate broken: {eq}")
+    if not eq.get("pipelined_bitwise_serial"):
+        failures.append("pipelined results no longer bitwise == serial")
+    skew = rec.get("skew")
+    if skew:
+        if not skew["equivalence"].get("atol_1e5_ok"):
+            failures.append(f"skew-lane equivalence broken: {skew['equivalence']}")
+        if skew["waste_reduction_vs_single"] < 2.0:
+            failures.append(
+                "two-level router no longer cuts padded-row waste >= 2x "
+                f"(got {skew['waste_reduction_vs_single']:.2f}x)"
+            )
+
+    if update or not os.path.exists(baseline_path):
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        base = {
+            lane: {"p50_ms": rec[lane]["p50_ms"]} for lane, _ in GATED_LANES
+        }
+        base["_source"] = {
+            "grid": rec["grid"], "m": rec["m"], "batch": rec["batch"],
+            "backend": rec["backend"],
+        }
+        with open(baseline_path, "w") as f:
+            json.dump(base, f, indent=2)
+            f.write("\n")
+        print(f"wrote baseline {baseline_path}")
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        return 1 if failures else 0
+
+    with open(baseline_path) as f:
+        base = json.load(f)
+    src = base.get("_source", {})
+    for key in ("grid", "m", "batch", "backend"):
+        if key in src and rec.get(key) != src[key]:
+            failures.append(
+                f"report {key}={rec.get(key)!r} does not match the baseline's "
+                f"{src[key]!r} — the smoke shapes changed; refresh the "
+                "baseline with --update in the same commit"
+            )
+    for lane, label in GATED_LANES:
+        got = rec[lane]["p50_ms"]
+        ref = base[lane]["p50_ms"]
+        ratio = got / ref
+        bad = ratio > MAX_REGRESSION and got - ref > ABS_SLACK_MS
+        status = "FAIL" if bad else "OK"
+        print(f"{status}: {label} p50 {got:.2f} ms vs baseline {ref:.2f} ms "
+              f"({ratio:.2f}x, limit {MAX_REGRESSION:.1f}x + {ABS_SLACK_MS:.0f} ms slack)")
+        if bad:
+            failures.append(f"{label} p50 regressed {ratio:.2f}x")
+    for msg in failures:
+        print(f"FAIL: {msg}")
+    if not failures:
+        print("bench gate passed")
+    return 1 if failures else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report", help="fresh bench_serve --smoke JSON to gate")
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from this report instead of gating")
+    args = ap.parse_args()
+    sys.exit(check(args.report, args.baseline, update=args.update))
+
+
+if __name__ == "__main__":
+    main()

@@ -34,10 +34,9 @@ from typing import Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import posterior, svgp
-from repro.core.neighbors import NUM_SLOTS, direction_permutations, neighbor_table
+from repro.core.neighbors import direction_permutations, neighbor_table
 from repro.core.partition import PartitionedData
 from repro.core.sampler import (
     SlotDistribution,

@@ -20,12 +20,12 @@ streams) — tested in tests/test_psvgp_spmd.py.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Sequence, Tuple
+from typing import Callable, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import svgp
 from repro.core.partition import PartitionGrid

@@ -16,9 +16,25 @@ This module is the HOST-SIDE half of that design: given a raw query batch
 it builds a :class:`RoutingTable` — per-partition padded/masked query
 blocks with jit-stable shapes, each query carrying its 4 corner blend
 weights and the corner models encoded as 3x3-halo SLOTS (offsets relative
-to the owning cell) rather than global partition ids. Slots are what make
+to the HOSTING cell) rather than global partition ids. Slots are what make
 the device program mesh-local: slot k on device p always means "the model
 at grid offset ``OFFSETS[k]`` from p", whichever device that is.
+
+Two-level (skew-aware) routing: with single-level routing every device
+block is padded to the HOTTEST cell's count, so a skewed stream (the
+common case for regional analyses) wastes ``(q_max - count)`` rows on
+nearly every device. The two-level table caps ``q_max`` below the hot-cell
+peak and SPILLS the overflow onto neighboring devices. The geometric fact
+that makes this free: a query's 4 blend corners span a 2x2 window of
+cells, and every cell of that window sees the whole window inside its own
+3x3 halo — so a query may be HOSTED by any of its corner cells, not just
+its owner, and the existing device program (host-stacked 9-slot ingest,
+local slot evaluation, composed reverse halo, per-row corner blend,
+``scatter_results`` inverse) computes the identical blend with zero new
+communication. ``spill=True`` in :func:`build_routing_table` performs the
+primary+spill assignment (:func:`spill_assign`, per-slot occupancy capped
+at q_max); :class:`TwoLevelQMax` is the streaming policy that feeds the
+post-spill occupancy high-water mark back into the recompile decision.
 
 The device-side half — the shard_map program that halo-exchanges the query
 blocks, evaluates every device's local cached posterior, returns results,
@@ -56,20 +72,32 @@ class RoutingTable(NamedTuple):
     jit-stable across request batches of varying size/skew (q_max itself
     recompiles only when a batch overflows the previous high-water mark).
 
+    A row of partition p's block is either PRIMARY (the query's owning
+    cell is p) or, in a two-level table (``spill=True``), a SPILL row: a
+    query from an overflowing neighbor cell re-hosted on p. Spill rows are
+    indistinguishable to the device program — corner slots are always
+    encoded relative to the HOSTING partition, and a spilled query's 4
+    corners stay inside the host's 3x3 halo by construction (the host is
+    one of the query's corner cells; see :func:`spill_assign`).
+
     Fields:
-      xq          (P, q_max, 2) float32: queries owned by each partition.
+      xq          (P, q_max, 2) float32: queries hosted by each partition.
         Padded rows hold the cell CENTER (an in-domain point, so the
         covariance stays well-conditioned); the mask keeps them out of
         every result.
       qmask       (P, q_max) float32 {0,1}: row validity.
       corner_slot (P, q_max, 4) int32 in [0, 9): each query's 4 corner
-        models as 3x3-halo slots relative to the owning partition
+        models as 3x3-halo slots relative to the hosting partition
         (see OFFSETS). Padded rows point at SELF_SLOT.
       corner_w    (P, q_max, 4) float32: bilinear blend weights (sum to 1
         on valid rows, all-zero on padded rows).
       src_idx     (P, q_max) int32: original index of each routed query in
         the request batch (0 on padded rows) — the scatter map back.
-      counts      (P,) int32: true number of queries owned per partition.
+      counts      (P,) int32: occupied rows per partition block (primary +
+        spilled-in; equals the owning-cell bucket counts when no spill).
+      owner       (P, q_max) int32: flat OWNING cell id of each row's
+        query (== the host id on primary and padded rows) — what makes
+        spill rows auditable: ``spill_mask`` is owner != host & valid.
     """
 
     xq: np.ndarray
@@ -78,6 +106,7 @@ class RoutingTable(NamedTuple):
     corner_w: np.ndarray
     src_idx: np.ndarray
     counts: np.ndarray
+    owner: np.ndarray
 
     @property
     def num_partitions(self) -> int:
@@ -90,6 +119,20 @@ class RoutingTable(NamedTuple):
     @property
     def num_queries(self) -> int:
         return int(self.counts.sum())
+
+    def spill_mask(self) -> np.ndarray:
+        """(P, q_max) bool: valid rows hosted for a foreign owning cell."""
+        host = np.arange(self.num_partitions, dtype=self.owner.dtype)[:, None]
+        return (self.owner != host) & (self.qmask > 0)
+
+    def num_spilled(self) -> int:
+        """Queries re-hosted off their owning cell (0 for single-level)."""
+        return int(self.spill_mask().sum())
+
+    def waste_rows(self) -> int:
+        """Padded (allocated-but-unused) device rows: P * q_max - N — the
+        quantity two-level routing exists to cap under skew."""
+        return self.num_partitions * self.q_max - self.num_queries
 
 
 def owning_cells(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
@@ -119,6 +162,116 @@ def halo_ids(grid: PartitionGrid) -> np.ndarray:
     return ids
 
 
+def spill_assign(
+    own: np.ndarray, ids: np.ndarray, q_max: int, num_partitions: int
+) -> np.ndarray | None:
+    """Two-level host assignment: every query of a cell whose bucket fits
+    ``q_max`` stays PRIMARY; hot-cell overflow SPILLS to one of the query's
+    other corner cells with free slot capacity.
+
+    Why corner cells are the only legal spill targets: the 4 blend corners
+    of a query span a 2x2 window of cells, so any cell of that window sees
+    all 4 corners inside its own 3x3 halo — re-hosting the query there
+    keeps the device program's slot encoding valid. An arbitrary halo
+    neighbor does NOT have that property (a corner can end up 2 steps
+    away), which is why the spill candidates are ``set(ids[i]) - {own[i]}``
+    and nothing else.
+
+    Deterministic greedy with per-slot occupancy:
+      * per hot cell, queries with NO spill candidates (domain-corner
+        degenerate windows) are kept primary first, then stable order;
+      * overflow is grouped by (owner, corner window) — all queries of a
+        group share the same candidate set — groups are processed most
+        constrained first (fewest candidates, then largest), and each
+        group fills its candidates in descending remaining capacity.
+
+    Args:
+      own: (N,) flat owning cell per query.
+      ids: (N, 4) corner cell ids (``blend.corner_ids_weights`` order).
+      q_max: per-partition slot budget (occupancy hard cap).
+      num_partitions: P.
+
+    Returns host (N,) int64 (bincount(host) <= q_max everywhere), or None
+    when the overflow does not fit the neighborhood's free capacity at
+    this q_max — the caller (policy) must raise q_max.
+    """
+    host = own.astype(np.int64).copy()
+    counts = np.bincount(own, minlength=num_partitions)
+    hot = np.flatnonzero(counts > q_max)
+    if hot.size == 0:
+        return host
+    occupancy = np.minimum(counts, q_max)
+    has_alt = (ids != own[:, None]).any(axis=1)  # (N,) any candidate != owner
+
+    # collect every hot cell's overflow (candidate-less queries kept
+    # primary first — they cannot move, so they must hold a primary slot)
+    overflow: list = []
+    for p in hot:
+        idx = np.flatnonzero(own == p)  # ascending == stable order
+        if (~has_alt[idx]).sum() > q_max:
+            return None  # immovable queries alone overflow the block
+        # candidate-less first (has_alt False sorts before True), stable
+        keep_order = idx[np.argsort(has_alt[idx], kind="stable")]
+        overflow.append(keep_order[q_max:])
+    ovf = np.sort(np.concatenate(overflow))
+    if ovf.size == 0:
+        return host
+
+    # group by (owner, corner window): one candidate set per group
+    keys = np.concatenate([own[ovf, None], ids[ovf]], axis=1)
+    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+    groups = []
+    for g in range(uniq.shape[0]):
+        members = ovf[inv == g]  # ascending original order
+        cands = np.unique(uniq[g, 1:])
+        cands = cands[cands != uniq[g, 0]]
+        groups.append((len(cands), -members.size, g, members, cands))
+    groups.sort(key=lambda t: t[:3])  # most constrained first, deterministic
+
+    for _, _, _, members, cands in groups:
+        left = members.size
+        filled = 0
+        # two passes over candidates in descending remaining capacity (id
+        # tiebreak): first an even capacity-capped split — leveling the
+        # occupancies keeps shared neighbors open for later groups — then
+        # a greedy pass that dumps any remainder wherever slots are free.
+        order = np.lexsort((cands, occupancy[cands] - q_max))
+        for npass in (len(order), 1):
+            for t, j in enumerate(order):
+                h = cands[j]
+                share = -(-left // max(npass - t, 1))  # ceil even split
+                take = min(left, share, q_max - int(occupancy[h]))
+                if take <= 0:
+                    continue
+                host[members[filled:filled + take]] = h
+                occupancy[h] += take
+                filled += take
+                left -= take
+            if left == 0:
+                break
+        if left > 0:
+            return None  # neighborhood capacity exhausted at this q_max
+    return host
+
+
+def min_spill_q_max(
+    own: np.ndarray, ids: np.ndarray, num_partitions: int
+) -> int:
+    """Smallest q_max the greedy :func:`spill_assign` can route this batch
+    at (binary search; the single-level answer, max bucket count, is always
+    feasible and bounds the search)."""
+    counts = np.bincount(own, minlength=num_partitions)
+    hi = max(int(counts.max()) if own.size else 0, 1)
+    lo = max(-(-own.size // num_partitions), 1)  # total rows must cover N
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if spill_assign(own, ids, mid, num_partitions) is not None:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
 def build_routing_table(
     grid: PartitionGrid,
     points: np.ndarray,
@@ -126,16 +279,20 @@ def build_routing_table(
     q_max: int | None = None,
     pad_multiple: int = 8,
     cells: Tuple[np.ndarray, np.ndarray] | None = None,
+    corners: Tuple[np.ndarray, np.ndarray] | None = None,
+    spill: bool = False,
+    hosts: np.ndarray | None = None,
 ) -> RoutingTable:
-    """Bucket a query batch by owning partition into padded device blocks.
+    """Bucket a query batch into padded device blocks (single- or two-level).
 
     Args:
       grid: the partition grid (must match the sharded cache's grid).
       points: (N, 2) query coordinates.
       q_max: fixed per-partition block size; default = the batch's max
-        bucket count rounded up to ``pad_multiple``. Raises ValueError if a
-        bucket overflows an explicit q_max — routing must never silently
-        drop queries.
+        bucket count rounded up to ``pad_multiple``. When a bucket
+        overflows an explicit q_max: with ``spill=False`` raises ValueError
+        (routing must never silently drop queries); with ``spill=True``
+        the overflow is re-hosted on corner-cell neighbors instead.
       pad_multiple: round q_max up to this (TPU sublane alignment).
       cells: precomputed ``owning_cells(grid, points)`` for this batch.
         Callers that already binned the batch (the q_max policies — both
@@ -143,6 +300,17 @@ def build_routing_table(
         buckets before the table is built) pass it through so the binning
         runs ONCE per request, not once per policy decision plus once per
         table; omitted, it is computed here.
+      corners: precomputed ``corner_ids_weights(grid, points)`` — same
+        reuse contract as ``cells`` (the two-level policy needs the corner
+        windows for its spill plan; don't recompute them here).
+      spill: build a TWO-LEVEL table — hot-cell overflow beyond q_max is
+        hosted on the queries' other corner cells (see :func:`spill_assign`
+        and the module docstring). Requires an explicit ``q_max`` (the
+        whole point is capping the block below the hot-cell peak; a policy
+        such as :class:`TwoLevelQMax` owns that choice).
+      hosts: precomputed ``spill_assign`` result for exactly this
+        (batch, q_max) — the two-level policy already ran the assignment
+        for its feasibility decision; pass it through so it runs once.
 
     Returns a :class:`RoutingTable` (see its docstring for shapes).
     """
@@ -159,29 +327,68 @@ def build_routing_table(
             f"({n},) arrays, got {ix.shape} and {iy.shape}"
         )
     own = iy * grid.gx + ix  # (N,) flat owning partition
-    ids, w = corner_ids_weights(grid, pts)  # (N, 4), (N, 4)
-    dx = ids % grid.gx - ix[:, None]  # (N, 4) in {-1, 0, 1}
-    dy = ids // grid.gx - iy[:, None]
-    slot = ((dy + 1) * 3 + (dx + 1)).astype(np.int32)
+    ids, w = corner_ids_weights(grid, pts) if corners is None else corners
+    if ids.shape != (n, 4) or w.shape != (n, 4):
+        raise ValueError(
+            f"corners must be corner_ids_weights output for the batch: "
+            f"expected two (n, 4) arrays, got {ids.shape} and {w.shape}"
+        )
 
     counts = np.bincount(own, minlength=P).astype(np.int32)
     need = int(counts.max()) if n else 0
+    if spill and q_max is None:
+        raise ValueError(
+            "spill=True needs an explicit q_max budget (use TwoLevelQMax "
+            "or min_spill_q_max to choose one)"
+        )
     if q_max is None:
         qm = max(need, 1)
-    elif need > q_max:
+    elif need > q_max and not spill:
         raise ValueError(
             f"partition bucket of {need} queries overflows q_max={q_max}; "
-            "routing never drops queries — raise q_max or split the batch"
+            "routing never drops queries — raise q_max, split the batch, "
+            "or route two-level (spill=True)"
         )
     else:
         qm = q_max
     qm = ceil_to(qm, pad_multiple)
 
+    if spill:
+        host = spill_assign(own, ids, qm, P) if hosts is None else np.asarray(hosts)
+        if host is None and qm != q_max:
+            # greedy feasibility is not strictly monotone in q_max, so the
+            # pad-rounded budget can in principle fail where the caller's
+            # exact q_max succeeded — any assignment within the smaller
+            # budget also fits the padded block (occupancy <= q_max <= qm)
+            host = spill_assign(own, ids, int(q_max), P)
+        if host is None:
+            raise ValueError(
+                f"two-level routing infeasible at q_max={qm}: hot-cell "
+                "overflow exceeds the corner neighborhoods' free capacity "
+                "— raise q_max (min_spill_q_max gives the feasible floor)"
+            )
+        if host.shape != (n,):
+            raise ValueError(f"hosts must be ({n},), got {host.shape}")
+    else:
+        host = own
+    counts = np.bincount(host, minlength=P).astype(np.int32)
+    if n and int(counts.max()) > qm:
+        raise ValueError("spill assignment overflows q_max — invalid hosts=")
+
+    # corner slots RELATIVE TO THE HOST cell; a spill host is one of the
+    # query's corner cells, so every slot stays inside the 3x3 halo
+    hx_, hy_ = host % grid.gx, host // grid.gx
+    dx = ids % grid.gx - hx_[:, None]  # (N, 4) in {-1, 0, 1}
+    dy = ids // grid.gx - hy_[:, None]
+    slot = ((dy + 1) * 3 + (dx + 1)).astype(np.int32)
+    if n and (np.abs(dx).max() > 1 or np.abs(dy).max() > 1):
+        raise AssertionError("spill host outside a query's corner window")
+
     # stable bucket fill, vectorized: position of each query within its
-    # owning partition's block = rank among same-owner queries.
-    order = np.argsort(own, kind="stable")
-    sorted_own = own[order]
-    pos = np.arange(n) - np.searchsorted(sorted_own, sorted_own)
+    # hosting partition's block = rank among same-host queries.
+    order = np.argsort(host, kind="stable")
+    sorted_host = host[order]
+    pos = np.arange(n) - np.searchsorted(sorted_host, sorted_host)
 
     # padded rows: cell centers (valid covariance inputs, masked on output)
     cx = 0.5 * (grid.x_edges[:-1] + grid.x_edges[1:])
@@ -193,16 +400,20 @@ def build_routing_table(
     corner_slot = np.full((P, qm, 4), SELF_SLOT, np.int32)
     corner_w = np.zeros((P, qm, 4), np.float32)
     src_idx = np.zeros((P, qm), np.int32)
+    owner = np.broadcast_to(
+        np.arange(P, dtype=np.int32)[:, None], (P, qm)
+    ).copy()
 
-    xq[sorted_own, pos] = pts[order]
-    qmask[sorted_own, pos] = 1.0
-    corner_slot[sorted_own, pos] = slot[order]
-    corner_w[sorted_own, pos] = w[order]
-    src_idx[sorted_own, pos] = order.astype(np.int32)
+    xq[sorted_host, pos] = pts[order]
+    qmask[sorted_host, pos] = 1.0
+    corner_slot[sorted_host, pos] = slot[order]
+    corner_w[sorted_host, pos] = w[order]
+    src_idx[sorted_host, pos] = order.astype(np.int32)
+    owner[sorted_host, pos] = own[order].astype(np.int32)
 
     return RoutingTable(
         xq=xq, qmask=qmask, corner_slot=corner_slot, corner_w=corner_w,
-        src_idx=src_idx, counts=counts,
+        src_idx=src_idx, counts=counts, owner=owner,
     )
 
 
@@ -257,6 +468,75 @@ class StreamingQMax:
         }
 
 
+class TwoLevelQMax(StreamingQMax):
+    """Streaming q_max policy for TWO-LEVEL (spill) routing.
+
+    :class:`StreamingQMax` tracks the high-water mark of the raw max
+    bucket count — under skew that is the hot cell's peak, and every other
+    device pads to it. This policy instead tracks the POST-SPILL per-slot
+    occupancy: a batch only forces a recompile when the greedy spill plan
+    (:func:`spill_assign`) cannot place it inside the current mark, and
+    growth jumps to the batch's minimal FEASIBLE q_max
+    (:func:`min_spill_q_max`) times the same multiplicative headroom — so
+    spill capacity feeds back into the recompile decision, and a zipf
+    stream settles near the neighborhood-balanced budget (~peak/9 for an
+    isolated hot cell) instead of the peak itself.
+
+    Usage per batch (``serve_sharded.make_request_stages`` does this)::
+
+        own = iy * grid.gx + ix                    # owning_cells, flat
+        ids, w = corner_ids_weights(grid, q)
+        q_max, hosts = policy.fit_spill(grid, own, ids)
+        table = routing.build_routing_table(
+            grid, q, q_max=q_max, cells=(ix, iy), corners=(ids, w),
+            spill=True, hosts=hosts)
+
+    Stats extend the base record with ``spilled`` — total queries
+    re-hosted off their owning cell so far.
+    """
+
+    def __init__(self, *, headroom: float = 1.25, pad_multiple: int = 8):
+        super().__init__(headroom=headroom, pad_multiple=pad_multiple)
+        self.spilled = 0  # total queries re-hosted so far
+
+    def fit_spill(
+        self, grid: PartitionGrid, own: np.ndarray, ids: np.ndarray
+    ) -> Tuple[int, np.ndarray]:
+        """Observe a batch (flat owning cells + corner ids); return the
+        (q_max, hosts) to route it with. ``hosts`` is the exact
+        ``spill_assign`` result at the returned q_max — pass BOTH into
+        ``build_routing_table`` so the plan is never recomputed."""
+        P = grid.num_partitions
+        if self.q_max:
+            host = spill_assign(own, ids, self.q_max, P)
+            if host is not None:  # fits the current mark: no shape change
+                self.spilled += int(np.sum(host != own))
+                return self.q_max, host
+            self.overflows += 1
+        need = min_spill_q_max(own, ids, P)
+        qm = max(
+            ceil_to(int(np.ceil(need * self.headroom)), self.pad_multiple),
+            self.q_max,
+        )
+        host = spill_assign(own, ids, qm, P)
+        while host is None:  # greedy can be non-monotone near the floor
+            qm = ceil_to(qm + self.pad_multiple, self.pad_multiple)
+            host = spill_assign(own, ids, qm, P)
+        self.q_max = qm
+        self.compiles += 1
+        self.spilled += int(np.sum(host != own))
+        return qm, host
+
+    def fit(self, counts: np.ndarray) -> int:
+        raise TypeError(
+            "TwoLevelQMax routes on corner windows, not bucket counts — "
+            "call fit_spill(grid, own, ids) (see the class docstring)"
+        )
+
+    def stats(self) -> dict:
+        return {**super().stats(), "spilled": self.spilled}
+
+
 def halo_slot_on_grid(grid: PartitionGrid) -> np.ndarray:
     """(P, 9) float32 {0,1}: 1 where the slot's neighbor exists on the grid
     (complement of the off-grid slots ``halo_ids`` clamps to self)."""
@@ -298,7 +578,12 @@ def scatter_results(table: RoutingTable, values: np.ndarray) -> np.ndarray:
     """Reassemble per-partition padded results into request order.
 
     ``values`` is (P, q_max) (or (P, q_max, ...)); returns (N, ...) with N =
-    ``table.num_queries``, inverting the routing permutation.
+    ``table.num_queries``, inverting the routing permutation. This is also
+    the inverse for TWO-LEVEL tables: ``src_idx`` maps every valid row —
+    primary or spilled — straight back to its request position, so spilled
+    rows need no extra bookkeeping on the way home (the composed reverse
+    halo already delivered their corner evaluations to the hosting device,
+    same as primary rows).
     """
     values = np.asarray(values)
     out = np.empty((table.num_queries,) + values.shape[2:], values.dtype)
@@ -349,7 +634,9 @@ def predict_routed(
     :func:`blend_slots` — exactly what the shard_map program in
     ``repro.launch.serve_sharded`` computes with ``ppermute`` halo
     exchanges instead of gathers. Returns (mean (N,), var (N,)) in request
-    order.
+    order. Works unchanged on TWO-LEVEL tables: a spill row's corner slots
+    are encoded relative to its hosting cell and stay inside the host's
+    halo, so the same slot evaluations resolve its blend.
     """
     hids = jnp.asarray(halo_ids(grid))  # (P, 9)
     xq = jnp.asarray(table.xq)

@@ -19,7 +19,6 @@ the paper / Hensman 2013 exactly.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, NamedTuple, Tuple
 
 import jax

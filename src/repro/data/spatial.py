@@ -80,6 +80,44 @@ def e3sm_like_field(
     return SpatialDataset(x=x, y=y, lonlat=lonlat.astype(np.float32), y_raw=y_raw.astype(np.float32))
 
 
+def zipf_query_stream(
+    grid,
+    batch: int,
+    requests: int,
+    *,
+    alpha: float = 1.1,
+    seed: int = 0,
+) -> list:
+    """Zipf-skewed serving query stream — the E3SM-style regional-analysis
+    workload (most requests probe a few hot regions, a long tail covers
+    the rest), used to exercise the two-level router.
+
+    Cells of ``grid`` (a ``repro.core.partition.PartitionGrid``) get
+    popularity ~ 1/rank^alpha under a seeded random rank permutation;
+    each query picks a cell from that law and a uniform location inside
+    it. ``alpha=0`` degenerates to a uniform-over-cells stream (NOT
+    uniform over area — cells are equal-area here, so it is both).
+
+    Returns ``requests`` host batches of shape (batch, 2) float32.
+    """
+    if alpha < 0:
+        raise ValueError(f"alpha must be >= 0, got {alpha}")
+    rng = np.random.default_rng(seed)
+    P = grid.gx * grid.gy
+    prob = 1.0 / (1.0 + np.arange(P)) ** alpha
+    prob = rng.permutation(prob)  # hot cells land anywhere on the grid
+    prob /= prob.sum()
+    out = []
+    for _ in range(requests):
+        cell = rng.choice(P, size=batch, p=prob)
+        cx, cy = cell % grid.gx, cell // grid.gx
+        u = rng.uniform(size=(batch, 2)).astype(np.float64)
+        x = grid.x_edges[cx] + u[:, 0] * (grid.x_edges[cx + 1] - grid.x_edges[cx])
+        y = grid.y_edges[cy] + u[:, 1] * (grid.y_edges[cy + 1] - grid.y_edges[cy])
+        out.append(np.stack([x, y], axis=-1).astype(np.float32))
+    return out
+
+
 def scale_lonlat(lonlat: np.ndarray) -> np.ndarray:
     """The same (lon, lat) -> GP-input scaling used by e3sm_like_field."""
     return np.stack([lonlat[..., 0] / 36.0, lonlat[..., 1] / 18.0], axis=-1).astype(np.float32)

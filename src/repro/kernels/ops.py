@@ -9,7 +9,6 @@ container validates them; on a real TPU backend they compile to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -188,7 +187,10 @@ def posterior_predict_slots(
     (S x q-blocks) with W/U/c resident across the whole grid — see
     ``repro.kernels.predict.posterior_predict_slots_pallas``. Padding
     contract and output conventions match :func:`posterior_predict`
-    (per-slot query rows padded then stripped; fvar un-clamped).
+    (per-slot query rows padded then stripped; fvar un-clamped). Rows are
+    evaluated independently, so blocks may mix owner, spilled-in and
+    padded rows (two-level routing) — masked semantics are the caller's
+    qmask/weights, oracle ``ref.posterior_predict_slots_masked``.
     """
     require_rbf(cov_fn)
     interpret = _interpret_default() if interpret is None else interpret

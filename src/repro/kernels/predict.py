@@ -25,6 +25,16 @@ q-blocks), evaluating the local model on all S stacked query blocks while
 W, U and c stay resident in VMEM across the WHOLE (S x Qb) grid — the
 factors are staged into VMEM once per request instead of once per slot,
 and the (9*q_max, d) reshape round-trip of the unstacked call disappears.
+
+Masking/row-mix contract (what lets TWO-LEVEL routing reuse this kernel
+unchanged): both kernel bodies are strictly ROW-INDEPENDENT — output row
+i is a function of input row i and the resident W/U/c only (the row-sum
+reductions run along the m axis, never across queries). A block may
+therefore freely mix owner rows, spilled-in neighbor rows and padded
+placeholder rows; validity lives entirely in the caller's qmask /
+corner-weight zeros, and the oracle for the masked semantics is
+``ref.posterior_predict_slots_masked`` (held to the kernel in
+tests/test_posterior.py).
 """
 from __future__ import annotations
 

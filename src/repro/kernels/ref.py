@@ -88,3 +88,36 @@ def posterior_predict_slots(
     return jax.vmap(
         lambda xs: posterior_predict(xs, z, log_lengthscale, log_variance, w, u, c)
     )(hx)
+
+
+def posterior_predict_slots_masked(
+    hx: jnp.ndarray,
+    qmask: jnp.ndarray,
+    z: jnp.ndarray,
+    log_lengthscale: jnp.ndarray,
+    log_variance: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    c: jnp.ndarray,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked slot-stacked oracle — the TWO-LEVEL routing contract.
+
+    A two-level block mixes owner rows, spill rows (real queries hosted
+    for an overflowing neighbor cell) and padded rows (qmask 0, cell-
+    center placeholders). The kernel's guarantee that makes the mix safe
+    is ROW INDEPENDENCE: every output row is a function of its own input
+    row and the resident factors only, so spill rows compute exactly what
+    they would as primaries and padded rows influence nothing.
+
+    This oracle states that contract as math: it equals
+    :func:`posterior_predict_slots` with masked rows forced to zero.
+    Tests hold the Pallas kernel to it two ways — kernel * qmask must
+    equal this oracle, and perturbing masked rows' INPUTS must leave
+    valid rows bitwise unchanged (see tests/test_posterior.py).
+
+    qmask: (S, Q) {0,1} row validity per slot block.
+    """
+    mean, fvar = posterior_predict_slots(
+        hx, z, log_lengthscale, log_variance, w, u, c
+    )
+    return mean * qmask, fvar * qmask

@@ -41,7 +41,7 @@ from repro.runtime.steps import (
     make_prefill_step,
     make_train_step,
 )
-from repro.sharding import batch_pspec, cache_pspecs, data_axes, params_pspecs, state_pspecs
+from repro.sharding import batch_pspec, cache_pspecs, data_axes, state_pspecs
 
 
 def _data_shardable(n: int, mesh) -> bool:
@@ -171,7 +171,10 @@ def dryrun_one(
         t1 = hlo_analysis.roofline(_lower_combo(c1, shape_name, mesh, fsdp=fsdp))
         t2 = hlo_analysis.roofline(_lower_combo(c2, shape_name, mesh, fsdp=fsdp))
         k = n_periods - 1  # extra periods beyond the 1-period variant
-        ex = lambda a1, a2: a1 + k * (a2 - a1)
+
+        def ex(a1, a2):
+            return a1 + k * (a2 - a1)
+
         breakdown = {
             key: max(
                 int(ex(t1.collective_breakdown.get(key, 0), t2.collective_breakdown.get(key, 0))),
@@ -282,7 +285,10 @@ def dryrun_psvgp(*, multi_pod: bool = False, comm: str = "ppermute", verbose: bo
     t0 = time.time()
 
     f32 = jnp.float32
-    sds = lambda shape, dt=f32: jax.ShapeDtypeStruct(shape, dt)
+
+    def sds(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
     params = SVGPParams(
         m_star=sds((P_, m)), s_tril=sds((P_, m, m)), z=sds((P_, m, d)),
         cov=CovarianceParams(log_lengthscale=sds((P_, d)), log_variance=sds((P_,))),

@@ -15,11 +15,14 @@ back-to-back):
 
   HOST, overlapped with the mesh evaluating the PREVIOUS request:
   1. route the batch (``routing.build_routing_table``; q_max follows the
-     streaming high-water-mark policy ``routing.StreamingQMax``) and stack
-     each device's full 9-slot halo of query blocks
-     (``routing.make_halo_stacker``) — queries are host data, so the halo
-     ingest rides the dispatch-time host->device transfer and costs zero
-     mesh collectives,
+     streaming high-water-mark policy ``routing.StreamingQMax``, or its
+     two-level variant ``routing.TwoLevelQMax`` — ``--gp-router
+     two-level`` — which spills hot-cell overflow onto corner-cell
+     neighbors so skewed streams stop padding every device to the
+     hottest cell) and stack each device's full 9-slot halo of query
+     blocks (``routing.make_halo_stacker``) — queries are host data, so
+     the halo ingest rides the dispatch-time host->device transfer and
+     costs zero mesh collectives,
 
   DEVICE (``make_sharded_blend``):
   2. evaluate the LOCAL cached posterior on all 9 stacked blocks at once —
@@ -346,23 +349,41 @@ def make_request_stages(
                       back to request order. The ONLY sync point.
 
     Exactly one of ``policy`` (live stream) / ``q_max`` (whole-stream
-    prepass, ``fixed_q_max``) must be given.
+    prepass, ``fixed_q_max``) must be given. A
+    :class:`routing.TwoLevelQMax` policy routes TWO-LEVEL: hot-cell
+    overflow beyond the (post-spill) q_max budget is re-hosted on the
+    queries' corner-cell neighbors, so a skewed stream no longer pads
+    every device to the hottest cell's peak. The device program is the
+    SAME either way — spill rows carry host-relative corner slots like
+    any other row — so switching routers never recompiles per se; only
+    the q_max trajectory differs. Route stays pure numpy in both modes.
     """
     if (policy is None) == (q_max is None):
         raise ValueError("pass exactly one of policy= (streaming) or q_max= (fixed)")
     stacker = routing.make_halo_stacker(grid)
+    two_level = isinstance(policy, routing.TwoLevelQMax)
+    if two_level:
+        from repro.core.blend import corner_ids_weights
 
     def route(q):
         pts = np.asarray(q, np.float32)
         cells = routing.owning_cells(grid, pts)
-        if policy is not None:
+        if two_level:
+            own = cells[1] * grid.gx + cells[0]
+            corners = corner_ids_weights(grid, pts)
+            qm, hosts = policy.fit_spill(grid, own, corners[0])
+            table = routing.build_routing_table(
+                grid, pts, q_max=qm, cells=cells, corners=corners,
+                spill=True, hosts=hosts,
+            )
+        elif policy is not None:
             counts = np.bincount(
                 cells[1] * grid.gx + cells[0], minlength=grid.num_partitions
             )
             qm = policy.fit(counts)
+            table = routing.build_routing_table(grid, pts, q_max=qm, cells=cells)
         else:
-            qm = q_max
-        table = routing.build_routing_table(grid, pts, q_max=qm, cells=cells)
+            table = routing.build_routing_table(grid, pts, q_max=q_max, cells=cells)
         return table, (stacker(table.xq), table.corner_slot, table.corner_w)
 
     def submit(routed):
@@ -469,14 +490,25 @@ def serve_sharded(args) -> dict:
         mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=use_pallas
     )
 
-    rng = np.random.default_rng(args.seed + 1)
-    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
     B = args.gp_batch
-    batches = [
-        rng.uniform(lo, hi, (B, 2)).astype(np.float32)
-        for _ in range(args.gp_requests)
-    ]
-    policy = routing.StreamingQMax()
+    skew = getattr(args, "gp_skew", 0.0)
+    if skew > 0:
+        from repro.data.spatial import zipf_query_stream
+
+        batches = zipf_query_stream(
+            grid, B, args.gp_requests, alpha=skew, seed=args.seed + 1
+        )
+    else:
+        rng = np.random.default_rng(args.seed + 1)
+        lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+        batches = [
+            rng.uniform(lo, hi, (B, 2)).astype(np.float32)
+            for _ in range(args.gp_requests)
+        ]
+    if getattr(args, "gp_router", "single") == "two-level":
+        policy = routing.TwoLevelQMax()
+    else:
+        policy = routing.StreamingQMax()
     route, submit, collect = make_request_stages(
         grid, blend_fn, cache_sh, policy=policy
     )
@@ -501,7 +533,10 @@ def serve_sharded(args) -> dict:
         "mesh": f"{grid.gy}x{grid.gx}",
         "devices": mesh.size,
         "mode": "serial" if serial else "pipelined",
+        "router": "two-level" if isinstance(policy, routing.TwoLevelQMax) else "single",
+        "skew_alpha": skew,
         "qmax_policy": policy.stats(),
+        "waste_rows_last_batch": mesh.size * policy.q_max - B,
         "latency_ms": pct,
         "points_per_s": qps,
         "mean_err_vs_replicated": mean_err,
@@ -610,6 +645,16 @@ def add_gp_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--gp-serial", action="store_true",
                     help="sharded mode: run the synchronous request loop "
                          "instead of the overlapped (double-buffered) pipeline")
+    ap.add_argument("--gp-skew", type=float, default=0.0, metavar="ALPHA",
+                    help="query stream skew: zipf exponent over cells "
+                         "(0 = uniform over the domain, the default)")
+    ap.add_argument("--gp-router", choices=("single", "two-level"),
+                    default="single",
+                    help="q_max routing policy: 'single' pads every device "
+                         "block to the hottest cell; 'two-level' spills "
+                         "hot-cell overflow onto corner-cell neighbors "
+                         "(routing.TwoLevelQMax), capping padded-row waste "
+                         "under skewed streams")
 
 
 def main() -> None:

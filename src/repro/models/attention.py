@@ -80,7 +80,6 @@ def _sdpa(q, k, v, mask, num_kv: int) -> jnp.ndarray:
     """Grouped scaled-dot-product attention.
     q (B,S,H,hd), k/v (B,T,KV,hd), mask (S,T) or (B,S,T) bool."""
     B, S, H, hd = q.shape
-    T = k.shape[1]
     G = H // num_kv
     qg = q.reshape(B, S, num_kv, G, hd)
     logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)

@@ -147,12 +147,17 @@ def mlstm_forward(
     else:
         pad = (-S) % chunk
         if pad:
-            zpad = lambda a, ax: jnp.pad(a, [(0, pad if i == ax else 0) for i in range(a.ndim)])
+            def zpad(a, ax):
+                return jnp.pad(a, [(0, pad if i == ax else 0) for i in range(a.ndim)])
+
             q, k, v = zpad(q, 2), zpad(k, 2), zpad(v, 2)
             i_gate = zpad(i_gate, 2)
             f_gate = jnp.pad(f_gate, ((0, 0), (0, 0), (0, pad)), constant_values=1.0)
         nch = q.shape[2] // chunk
-        resh = lambda a: a.reshape(B, H, nch, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+        def resh(a):
+            return a.reshape(B, H, nch, chunk, -1).transpose(2, 0, 1, 3, 4)
+
         qc, kc, vc = resh(q), resh(k), resh(v)
         gi = i_gate.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
         gf = f_gate.reshape(B, H, nch, chunk).transpose(2, 0, 1, 3)
@@ -266,5 +271,8 @@ def slstm_forward(
 
 def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
     W = cfg.rnn_width or cfg.d_model
-    z = lambda: jnp.zeros((batch, W), jnp.float32)
+
+    def z():
+        return jnp.zeros((batch, W), jnp.float32)
+
     return {"c": z(), "n": z(), "h": z(), "m": jnp.full((batch, W), -1e30, jnp.float32)}

@@ -16,7 +16,6 @@ KV / recurrent caches mirror the parameter structure:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -275,7 +274,6 @@ def _encoder_forward(p: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.nd
     if "enc_proj" in p:
         x = x @ p["enc_proj"].astype(dt)
     x = x + p["enc_pos"].astype(dt)[None, : x.shape[1]]
-    positions = jnp.arange(x.shape[1])
 
     def body(h, lp):
         # bidirectional self-attention: no cache, no causal mask -> use
@@ -298,7 +296,6 @@ def _encoder_forward(p: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.nd
             x, _ = body(x, jax.tree.map(lambda a: a[i], p["encoder"]))
     else:
         x, _ = jax.lax.scan(body, x, p["encoder"])
-    del positions
     return rms_norm(x, p["enc_norm"], cfg.norm_eps)
 
 

@@ -193,7 +193,6 @@ def cache_pspecs(cache: Any, mesh: Mesh, *, shard_seq: bool) -> Any:
         names = _path_names(path)
         name = names[-1]
         nlead = 1 if "stack" in names else 0  # stacked period axis
-        nd = leaf.ndim - nlead
         if name in ("k", "v", "cross_k", "cross_v"):  # (B, S, KV, hd)
             kv = leaf.shape[nlead + 2]
             head_ax = "model" if kv % mesh.shape["model"] == 0 else None

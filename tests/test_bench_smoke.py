@@ -48,3 +48,16 @@ def test_bench_serve_smoke(tmp_path):
     assert rec["speedup"]["pipelined_vs_serial_p50"] > 0
     # the PR-2 cross-run comparison is only valid on its own 16x16 shape
     assert "baseline" not in rec and "serial_vs_pr2_p50" not in rec["speedup"]
+
+    # skew lanes: the two-level router must keep its acceptance gates even
+    # at smoke shapes — >= 2x padded-row waste reduction on the zipf
+    # stream, results equal to the single-level route, replicated-level
+    # accuracy, pipelined bitwise == serial
+    skew = rec["skew"]
+    assert skew["two_level"]["qmax_policy"]["q_max"] <= \
+        skew["single_level"]["qmax_policy"]["q_max"]
+    assert skew["waste_reduction_vs_single"] >= 2.0, skew
+    zeq = skew["equivalence"]
+    assert zeq["atol_1e5_ok"], zeq
+    assert zeq["two_level_vs_single_max_abs_err"] <= 1e-5, zeq
+    assert zeq["pipelined_bitwise_serial"], "two-level pipelining changed the math"

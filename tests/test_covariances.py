@@ -10,7 +10,6 @@ except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
 
 from repro.gp.covariances import (
     _LON_PERIOD,
-    CovarianceParams,
     init_covariance_params,
     make_covariance,
     matern32,

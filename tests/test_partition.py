@@ -1,6 +1,5 @@
 """Partitioner + neighborhood topology invariants (unit + property tests)."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # optional dev dependency (pyproject [dev]); shim sweeps
@@ -94,7 +93,6 @@ def test_boundary_probe_count_matches_paper_scale():
     total = probes.points.shape[0] * probes.points.shape[1]
     assert total == (19 * 20 + 20 * 19) * 23  # 17,480 — paper reports 17,556
     # every probe lies on the shared edge of its (left, right) pair
-    pts = np.asarray(probes.points)
     for e in range(probes.left.shape[0]):
         l, r = int(probes.left[e]), int(probes.right[e])
         lx, ly = grid.cell_of(l)

@@ -121,6 +121,39 @@ def test_pallas_slots_kernel_matches_ref(S, Q, md):
     np.testing.assert_allclose(np.asarray(var_k), np.asarray(var_r), atol=1e-5)
 
 
+def test_slots_kernel_masked_oracle_and_row_independence():
+    """The TWO-LEVEL routing contract on the slot-stacked kernel: a block
+    may mix owner rows, spilled-in neighbor rows and padded placeholder
+    rows, which is only safe because every output row depends on its own
+    input row and the resident factors alone. Held two ways: kernel *
+    qmask equals the masked oracle (ref.posterior_predict_slots_masked),
+    and junk written into the masked rows' INPUTS leaves every valid row
+    of the kernel output bitwise unchanged."""
+    from repro.kernels import ref as kref
+
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    cfg, params = _model(ks[0], m=12, d=2)
+    cov_fn = make_covariance("rbf")
+    cache = posterior.build_cache(params, cov_fn)
+    S, Q = 9, 24
+    hx = jax.random.uniform(ks[1], (S, Q, 2), minval=-2, maxval=2)
+    qmask = (jax.random.uniform(ks[2], (S, Q)) < 0.6).astype(hx.dtype)
+    tail = (cache.z, cache.cov.log_lengthscale, cache.cov.log_variance,
+            cache.w, cache.u, cache.c)
+    mean_k, var_k = ops.posterior_predict_slots(hx, *tail)
+    mean_o, var_o = kref.posterior_predict_slots_masked(hx, qmask, *tail)
+    np.testing.assert_allclose(
+        np.asarray(mean_k * qmask), np.asarray(mean_o), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(var_k * qmask), np.asarray(var_o), atol=1e-5)
+
+    junk = jnp.where(qmask[..., None] > 0, hx, 1e3 * jnp.ones_like(hx))
+    mean_j, var_j = ops.posterior_predict_slots(junk, *tail)
+    keep = np.asarray(qmask) > 0
+    np.testing.assert_array_equal(np.asarray(mean_k)[keep], np.asarray(mean_j)[keep])
+    np.testing.assert_array_equal(np.asarray(var_k)[keep], np.asarray(var_j)[keep])
+
+
 def test_pallas_slots_kernel_on_halo_stacked_blocks():
     """The kernel's real serving input: halo-stacked blocks from a routing
     table, including edge/corner partitions whose off-grid slots are

@@ -7,10 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import psvgp, routing, svgp
+from repro.core import posterior, psvgp, routing, svgp
 from repro.core.blend import _corner_ids_weights, corner_ids_weights, predict_blended
 from repro.core.partition import make_grid, partition_data
 from repro.data.spatial import e3sm_like_field
+from repro.gp.covariances import make_covariance
 
 
 def _grid_and_queries(gx=5, gy=4, n=613, seed=3):
@@ -175,6 +176,172 @@ def test_prepass_returns_reusable_cells():
         np.testing.assert_array_equal(t0.xq, t1.xq)
 
 
+def _skewed_queries(gx=6, gy=5, n_base=500, n_hot=1500, seed=5):
+    """A batch with one synthetic hot cell (the two-level router's prey)."""
+    rng = np.random.default_rng(seed)
+    base = rng.uniform([0.0, 0.0], [6.0, 5.0], size=(n_base, 2))
+    hot = rng.uniform([2.0, 2.0], [3.0, 3.0], size=(n_hot, 2))
+    pts = np.concatenate([base, hot]).astype(np.float32)
+    rng.shuffle(pts)
+    grid = make_grid(pts, gx, gy)
+    return grid, pts
+
+
+def test_two_level_table_spills_within_corner_windows():
+    """The tentpole's core invariants: a spill table at a q_max far below
+    the hot-cell peak still recovers every query bitwise, respects the
+    per-slot occupancy cap, hosts every spilled query on one of its own
+    corner cells (so its blend corners stay inside the host's halo), and
+    resolves exactly the same (corner id, weight) pairs as the blend."""
+    grid, pts = _skewed_queries()
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, w = corner_ids_weights(grid, pts)
+    single = routing.build_routing_table(grid, pts)
+
+    q_max = routing.min_spill_q_max(own, ids, grid.num_partitions)
+    assert q_max < int(single.counts.max())  # the cap really is below peak
+    table = routing.build_routing_table(
+        grid, pts, q_max=q_max, cells=(ix, iy), corners=(ids, w), spill=True
+    )
+    assert table.num_queries == len(pts)
+    assert int(table.counts.max()) <= table.q_max
+    assert table.num_spilled() > 0
+    assert table.waste_rows() * 2 <= single.waste_rows()  # the point of it
+
+    # scatter inverts the two-level permutation bitwise
+    np.testing.assert_array_equal(routing.scatter_results(table, table.xq), pts)
+    np.testing.assert_array_equal(routing.scatter_results(table, table.corner_w), w)
+    np.testing.assert_array_equal(routing.scatter_results(table, table.owner), own)
+
+    # host-relative slots resolve to the blend's corner ids, and every
+    # spilled query is hosted on one of its corner cells
+    P = grid.num_partitions
+    hids = routing.halo_ids(grid)
+    host_of_row = np.broadcast_to(np.arange(P)[:, None], table.qmask.shape)
+    host_back = routing.scatter_results(table, host_of_row)
+    slot_back = routing.scatter_results(table, table.corner_slot)
+    np.testing.assert_array_equal(
+        np.take_along_axis(hids[host_back], slot_back, axis=1), ids
+    )
+    spilled = host_back != own
+    assert spilled.sum() == table.num_spilled()
+    assert (host_back[:, None] == np.where(ids == own[:, None], -1, ids))[
+        spilled
+    ].any(axis=1).all(), "a spilled query left its corner window"
+
+    # padded rows still carry weight zero / self slots
+    assert (table.corner_w[table.qmask == 0] == 0).all()
+    assert (table.corner_slot[table.qmask == 0] == routing.SELF_SLOT).all()
+
+
+def test_two_level_infeasible_and_guards():
+    grid, pts = _skewed_queries()
+    with pytest.raises(ValueError, match="spill=True needs an explicit q_max"):
+        routing.build_routing_table(grid, pts, spill=True)
+    # below the feasible floor the assignment must refuse, not drop
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, _ = corner_ids_weights(grid, pts)
+    floor = routing.min_spill_q_max(own, ids, grid.num_partitions)
+    assert routing.spill_assign(own, ids, max(floor - 9, 1), grid.num_partitions) is None
+    with pytest.raises(ValueError, match="infeasible"):
+        routing.build_routing_table(grid, pts, q_max=max(floor - 9, 1),
+                                    pad_multiple=1, spill=True)
+    # determinism: two identical calls produce identical assignments
+    h1 = routing.spill_assign(own, ids, floor, grid.num_partitions)
+    h2 = routing.spill_assign(own, ids, floor, grid.num_partitions)
+    np.testing.assert_array_equal(h1, h2)
+
+
+def test_two_level_qmax_policy():
+    """Post-spill high-water-mark semantics: a steady skewed stream costs
+    ONE compile at a q_max well under the hot-cell peak; only a genuinely
+    infeasible burst grows the mark; spill totals are reported."""
+    grid, pts = _skewed_queries()
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, _ = corner_ids_weights(grid, pts)
+    peak = int(np.bincount(own, minlength=grid.num_partitions).max())
+
+    pol = routing.TwoLevelQMax(headroom=1.25, pad_multiple=8)
+    qm0, hosts = pol.fit_spill(grid, own, ids)
+    assert hosts.shape == own.shape and qm0 < peak
+    assert pol.stats()["compiles"] == 1 and pol.stats()["overflows"] == 0
+    assert pol.stats()["spilled"] > 0
+    # steady stream: same batch fits the mark, no recompile
+    for _ in range(3):
+        qm, _ = pol.fit_spill(grid, own, ids)
+        assert qm == qm0
+    assert pol.stats()["compiles"] == 1
+    # a much hotter burst overflows the mark and grows it
+    burst = np.concatenate([pts] * 4)
+    bix, biy = routing.owning_cells(grid, burst)
+    bids, _ = corner_ids_weights(grid, burst)
+    qm2, hosts2 = pol.fit_spill(grid, biy * grid.gx + bix, bids)
+    assert qm2 > qm0
+    assert pol.stats() == {
+        "q_max": qm2, "compiles": 2, "overflows": 1, "spilled": pol.spilled
+    }
+    # the mark never shrinks and the single-level fit API is refused
+    qm3, _ = pol.fit_spill(grid, own, ids)
+    assert qm3 == qm2
+    with pytest.raises(TypeError):
+        pol.fit(np.array([1, 2, 3]))
+
+
+def test_streaming_qmax_overflow_recovery_matches_prepass():
+    """A stream whose PEAK ARRIVES LATE must re-route (never drop) the
+    overflowing batch: the streaming policy grows its mark to cover the
+    peak batch, whose routed table — and therefore its served results —
+    must match the whole-stream prepass route BITWISE. Pre-peak batches
+    route at a smaller q_max, so for them only full recovery (the scatter
+    inverse) is asserted, not table equality."""
+    from repro.launch import serve_sharded as ss
+
+    grid, pts = _skewed_queries()
+    rng = np.random.default_rng(9)
+    small = [pts[rng.choice(len(pts), 300, replace=False)] for _ in range(3)]
+    batches = small + [pts]  # the peak arrives last
+
+    q_fix, cells = ss.prepass_routing(grid, batches)
+    pol = routing.StreamingQMax()  # same headroom/alignment defaults
+    tables_stream, tables_fix = [], []
+    for i, q in enumerate(batches):
+        c = routing.owning_cells(grid, q)
+        counts = np.bincount(
+            c[1] * grid.gx + c[0], minlength=grid.num_partitions
+        )
+        qm = pol.fit(counts)
+        tables_stream.append(
+            routing.build_routing_table(grid, q, q_max=qm, cells=c)
+        )
+        tables_fix.append(
+            routing.build_routing_table(grid, q, q_max=q_fix, cells=cells[i])
+        )
+    assert pol.overflows >= 1  # the late peak really burst the mark
+    # every batch fully recovered (nothing dropped) at every mark
+    for q, t in zip(batches, tables_stream):
+        assert t.num_queries == len(q)
+        np.testing.assert_array_equal(routing.scatter_results(t, t.xq), q)
+    # the peak batch: policy mark == prepass mark, tables bitwise equal...
+    assert tables_stream[-1].q_max == q_fix
+    for a, b in zip(tables_stream[-1], tables_fix[-1]):
+        np.testing.assert_array_equal(a, b)
+    # ...and so are the served results (single-host reference program)
+    cov_fn = make_covariance("rbf")
+    params = jax.vmap(
+        lambda k: svgp.init_svgp_params(
+            k, svgp.SVGPConfig(num_inducing=5, input_dim=2)
+        )
+    )(jax.random.split(jax.random.PRNGKey(0), grid.num_partitions))
+    cache = posterior.build_cache_stacked(params, cov_fn)
+    m_s, v_s = routing.predict_routed(cache, cov_fn, grid, tables_stream[-1])
+    m_f, v_f = routing.predict_routed(cache, cov_fn, grid, tables_fix[-1])
+    np.testing.assert_array_equal(m_s, m_f)
+    np.testing.assert_array_equal(v_s, v_f)
+
+
 def test_halo_stacker_matches_halo_ids():
     """The host-side halo ingest: hx[p, k] is partition p+OFFSETS[k]'s
     block on-grid and zeros off-grid — exactly what a mesh-side ppermute
@@ -221,3 +388,18 @@ def test_predict_routed_matches_predict_blended():
     m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
     np.testing.assert_allclose(m_rt, np.asarray(m_rep), atol=1e-5)
     np.testing.assert_allclose(v_rt, np.asarray(v_rep), atol=1e-5)
+
+    # the TWO-LEVEL route through the same program serves the same answers
+    # (row placement is scheduling, never math)
+    ix, iy = routing.owning_cells(grid, q)
+    own = iy * grid.gx + ix
+    ids, w = corner_ids_weights(grid, q)
+    qm = routing.min_spill_q_max(own, ids, grid.num_partitions)
+    t2 = routing.build_routing_table(
+        grid, q, q_max=qm, cells=(ix, iy), corners=(ids, w), spill=True
+    )
+    m_2l, v_2l = routing.predict_routed(cache, static.cov_fn, grid, t2)
+    np.testing.assert_allclose(m_2l, np.asarray(m_rep), atol=1e-5)
+    np.testing.assert_allclose(v_2l, np.asarray(v_rep), atol=1e-5)
+    np.testing.assert_allclose(m_2l, m_rt, atol=1e-6)
+    np.testing.assert_allclose(v_2l, v_rt, atol=1e-6)

@@ -135,6 +135,46 @@ def test_cache_in_specs_derived_from_structure():
     )
 
 
+def test_two_level_policy_drives_pipeline_shapes():
+    """Host half of two-level serving: a skewed stream routed through the
+    stage factory with a TwoLevelQMax policy keeps q_max well under the
+    hot-cell peak, every table honors the policy's mark, the halo stack
+    keeps the (P, 9, q_max, 2) contract, and the scatter inverse recovers
+    every batch bitwise."""
+    from repro.core.partition import make_grid
+
+    rng = np.random.default_rng(3)
+    base = rng.uniform(-1.0, 1.0, size=(1500, 2)).astype(np.float32)
+    # hot spot well inside the CENTER cell of the 3x3 grid over [-1, 1]^2
+    hot = rng.uniform(-0.25, -0.05, size=(3500, 2)).astype(np.float32)
+    pts = np.concatenate([base, hot])
+    rng.shuffle(pts)
+    grid = make_grid(pts, 3, 3)
+    policy = routing.TwoLevelQMax()
+    stacker = routing.make_halo_stacker(grid)
+    from repro.core.blend import corner_ids_weights
+
+    peak = 0
+    for nsz in (800, 800, 5000, 5000):
+        q = pts[:nsz]
+        cells = routing.owning_cells(grid, q)
+        own = cells[1] * grid.gx + cells[0]
+        ids, w = corner_ids_weights(grid, q)
+        peak = max(peak, int(np.bincount(own, minlength=9).max()))
+        qm, hosts = policy.fit_spill(grid, own, ids)
+        table = routing.build_routing_table(
+            grid, q, q_max=qm, cells=cells, corners=(ids, w),
+            spill=True, hosts=hosts,
+        )
+        assert table.q_max == qm
+        assert int(table.counts.max()) <= qm
+        np.testing.assert_array_equal(routing.scatter_results(table, table.xq), q)
+        hx = stacker(table.xq)
+        assert hx.shape == (grid.num_partitions, 9, qm, 2)
+    assert policy.q_max < peak  # the budget stayed under the hot peak
+    assert policy.compiles <= 2 and policy.spilled > 0
+
+
 def test_streaming_policy_drives_pipeline_shapes():
     """End-to-end host half: a growing stream recompiles boundedly and
     every batch's table honors the policy's q_max."""

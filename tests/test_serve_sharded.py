@@ -11,6 +11,10 @@ subprocess with its own XLA_FLAGS. Covered there:
   * sharded blend == predict_routed reference == replicated
     predict_blended to atol 1e-5 on the same trained state — through the
     pipeline stages the production driver uses;
+  * TWO-LEVEL routing through the SAME shard_map program: a hot-cell
+    batch routed with spill (TwoLevelQMax, q_max under the hot peak)
+    still matches replicated to atol 1e-5 — spill rows ride the identical
+    device program, collectives and all;
   * pipelined loop == serial loop BITWISE on the same request stream
     (overlap is scheduling, never math), with the streaming q_max policy;
   * the fused slot-stacked Pallas program (use_pallas=True, interpret on
@@ -105,6 +109,24 @@ _SCRIPT = textwrap.dedent(
     for i, (ms, vs) in enumerate(serial):
         np.testing.assert_array_equal(piped[i][0], ms)
         np.testing.assert_array_equal(piped[i][1], vs)
+
+    # --- TWO-LEVEL routing through the SAME shard_map program: a skewed
+    # batch (hot cell) routed with spill at a q_max under the hot peak
+    # must serve the same answers as the replicated blend ---
+    hotq = np.concatenate([
+        q, rng.uniform(lo + 0.30 * (hi - lo), lo + 0.45 * (hi - lo),
+                       (1500, 2)).astype(np.float32)])
+    pol2 = routing.TwoLevelQMax()
+    route2, submit2, collect2 = ss.make_request_stages(
+        grid, blend_fn, cache_sh, policy=pol2)
+    m_2l, v_2l = collect2(submit2(route2(hotq)))
+    cells = routing.owning_cells(grid, hotq)
+    peak = int(np.bincount(cells[1] * grid.gx + cells[0],
+                           minlength=grid.num_partitions).max())
+    assert pol2.q_max < peak and pol2.spilled > 0, (pol2.stats(), peak)
+    m2_rep, v2_rep = predict_blended(static, state, grid, jnp.asarray(hotq), cache=cache)
+    np.testing.assert_allclose(m_2l, np.asarray(m2_rep), atol=1e-5)
+    np.testing.assert_allclose(v_2l, np.asarray(v2_rep), atol=1e-5)
 
     # --- fused slot-stacked Pallas program (interpret on CPU) matches the
     # jnp program inside the same shard_map ---
