@@ -1,10 +1,13 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check lint bench-predict bench-serve bench-serve-smoke bench-gate
+.PHONY: test test-full docs-check lint api-smoke bench-predict bench-serve bench-serve-smoke bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
+
+api-smoke:       ## fit a toy model, save, serve the loaded artifact (replicated + sharded)
+	$(PY) -m repro.api.smoke
 
 test-full:       ## everything, including the slow SPMD/dry-run lane
 	$(PY) -m pytest -q -m "slow or not slow"

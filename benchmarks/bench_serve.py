@@ -1,28 +1,34 @@
 """Serving SLO benchmark — replicated vs sharded PosteriorCache, with the
-sharded path measured in all three of its regimes:
+sharded path measured in all three of its regimes.
 
-  * replicated — ``blend.predict_blended`` against the full cache on one
-    device (the ``launch/serve.py --gp`` path);
-  * sharded serial — the distributed endpoint of ``launch/serve_sharded``
-    run synchronously: route, halo-stack, transfer + evaluate, scatter,
-    one request at a time (the PR-2 measurement regime, on the rebuilt
-    program). q_max comes from the whole-stream prepass
-    (``prepass_routing``), whose binning the table build REUSES;
-  * sharded pipelined — the overlapped driver
-    (``pipelined_request_loop``): batch t+1 is routed on the host while
-    the mesh evaluates batch t, q_max follows the streaming
-    high-water-mark policy (``routing.StreamingQMax``), and the loop only
-    blocks when a result is consumed. Results are bitwise identical to
-    serial (checked);
-  * sharded pipelined fused — same, with the slot-stacked Pallas predict
-    kernel (``use_pallas=True``). On CPU the kernel runs in INTERPRET
-    mode, so its latency lane is informative only there (and runs a
-    shortened stream); on TPU it is the production configuration;
+Every lane is constructed from a ``repro.api.ServeConfig`` and served
+through ``api.Server`` — the same front door the CLIs use — and each
+lane's record in BENCH_serve.json embeds that exact config
+(``serve_config``) plus the training ``fit_config``, so any row is
+reproducible from the report alone:
+
+  * replicated — ``ServeConfig(mode="replicated")``: the full cache on
+    one device (the ``launch/serve.py --gp`` path);
+  * sharded serial — ``ServeConfig(mode="sharded", pipeline="serial",
+    q_max=<prepass>)``: the distributed endpoint run synchronously, one
+    request at a time (the PR-2 measurement regime, on the rebuilt
+    program), q_max from the whole-stream prepass
+    (``serve_sharded.prepass_routing``);
+  * sharded pipelined — ``pipeline="pipelined"``: the overlapped driver
+    (batch t+1 routed on the host while the mesh evaluates batch t),
+    q_max from the streaming high-water-mark policy
+    (``routing.StreamingQMax``). Results bitwise identical to serial
+    (checked);
+  * sharded pipelined fused — ``backend="fused"``: the slot-stacked
+    Pallas predict kernel. On CPU the kernel runs in INTERPRET mode
+    (``ServeConfig.resolve_backend`` warns once), so its latency lane is
+    informative only there (and runs a shortened stream); on TPU it is
+    the production configuration — ``backend="auto"`` resolves to it
+    there and to the XLA-compiled jnp lane everywhere else;
   * skew lanes (``--skew zipf``, the default) — a zipf-skewed query
     stream (``repro.data.spatial.zipf_query_stream``) served twice
-    through the pipelined driver: once with the single-level
-    ``StreamingQMax`` router (every device block pads to the hottest
-    cell) and once with the two-level ``TwoLevelQMax`` router (hot-cell
+    through the pipelined driver: ``router="single"`` (every device
+    block pads to the hottest cell) vs ``router="two-level"`` (hot-cell
     overflow spills onto corner-cell neighbors). Reports p50/p99 and the
     padded-row waste of each, the waste-reduction ratio (the acceptance
     gate: >= 2x), the spill counts, plus the same equivalence gates —
@@ -75,10 +81,8 @@ def run(
     ss.ensure_host_devices(grid_side * grid_side)
 
     import jax
-    import jax.numpy as jnp
 
-    from repro.core import psvgp, routing
-    from repro.core.blend import predict_blended
+    from repro import api
 
     on_tpu = jax.default_backend() == "tpu"
     if fused_requests is None:
@@ -92,11 +96,10 @@ def run(
     # compares the same posterior both paths serve. The allclose gate needs
     # a CONVERGED posterior (same reason as bench_predict: near init the
     # f32 variance path is a large cancellation on both sides).
-    ds, grid, data, static, state = ss.train_demo_surface(
+    ds, fitted = ss.train_demo_surface(
         seed=0, n=n_train, grid_side=grid_side, m=m, train_iters=train_iters,
     )
-    cache = psvgp.posterior_cache(static, state)
-    jax.block_until_ready(cache)
+    grid = fitted.grid
 
     rng = np.random.default_rng(1)
     lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
@@ -105,65 +108,42 @@ def run(
     ]
 
     # ---- replicated lane --------------------------------------------------
-    def rep_answer(q):
-        out = predict_blended(static, state, grid, jnp.asarray(q), cache=cache)
-        jax.block_until_ready(out)
-        return out
-
-    pct_rep, qps_rep = ss.timed_request_loop(rep_answer, batches)
-
-    # ---- sharded setup ----------------------------------------------------
-    mesh = ss.mesh_for_grid(grid)
-    cache_sh = ss.shard_cache(cache, mesh)
-    jax.block_until_ready(cache_sh)
-    total_b, device_b = ss.cache_memory_bytes(cache_sh)
-    blend_fn = ss.make_sharded_blend(
-        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh
-    )
+    cfg_rep = api.ServeConfig(mode="replicated")
+    srv_rep = api.Server(fitted, cfg_rep)
+    m_rep, v_rep = srv_rep.submit(batches[0])  # warm + the equivalence target
+    rec_rep = srv_rep.stream(batches, warm=False)
 
     # ---- sharded serial lane (whole-stream prepass q_max) -----------------
-    q_max, cells = ss.prepass_routing(grid, batches)
-    stacker = routing.make_halo_stacker(grid)
+    # fixed_q_max: only the budget crosses into the ServeConfig — the
+    # Server's route stage re-bins each batch itself (one numpy bincount
+    # per request, microseconds against the tens-of-ms device window);
+    # that re-bin is the price of the uniform front door.
+    q_max = ss.fixed_q_max(grid, batches)
+    cfg_serial = api.ServeConfig(
+        mode="sharded", pipeline="serial", router="single",
+        backend="ref", q_max=q_max,
+    )
+    srv_serial = api.Server(fitted, cfg_serial)
+    total_b, device_b = srv_serial.cache_bytes
+    m_sh, v_sh = srv_serial.submit(batches[0])  # warmup/compile + gate
+    mean_err = float(np.abs(m_sh - m_rep).max())
+    var_err = float(np.abs(v_sh - v_rep).max())
 
-    serial_results = []
-    idx = {"i": 0}
-
-    def sh_answer(q):
-        i = idx["i"] % len(batches)
-        idx["i"] += 1
-        table = routing.build_routing_table(grid, q, q_max=q_max, cells=cells[i])
-        mean, var = blend_fn(
-            cache_sh, stacker(table.xq), table.corner_slot, table.corner_w
-        )
-        jax.block_until_ready((mean, var))
-        return (
-            routing.scatter_results(table, np.asarray(mean)),
-            routing.scatter_results(table, np.asarray(var)),
-        )
-
-    m_sh, v_sh = sh_answer(batches[0])  # warmup / compile + equivalence gate
-    idx["i"] = 0
-    m_rep, v_rep = rep_answer(batches[0])
-    mean_err = float(np.abs(m_sh - np.asarray(m_rep)).max())
-    var_err = float(np.abs(v_sh - np.asarray(v_rep)).max())
-
-    def sh_answer_keep(q):
-        out = sh_answer(q)
-        serial_results.append(out)
-        return out
-
-    # the equivalence check above already compiled + warmed the program
-    pct_serial, qps_serial = ss.timed_request_loop(sh_answer_keep, batches, warm=False)
+    serial_results: dict = {}
+    rec_serial = srv_serial.stream(
+        batches, warm=False,
+        on_result=lambda i, out: serial_results.setdefault(i, out),
+    )
 
     # ---- sharded pipelined lane (streaming q_max) -------------------------
-    policy = routing.StreamingQMax()
-    route, submit, collect = ss.make_request_stages(
-        grid, blend_fn, cache_sh, policy=policy
+    cfg_pipe = api.ServeConfig(
+        mode="sharded", pipeline="pipelined", router="single", backend="ref",
     )
-    pipe_results = {}
-    pct_pipe, qps_pipe = ss.pipelined_request_loop(
-        route, submit, collect, batches,
-        warm=True, on_result=lambda i, out: pipe_results.setdefault(i, out),
+    srv_pipe = api.Server(fitted, cfg_pipe)
+    pipe_results: dict = {}
+    rec_pipe = srv_pipe.stream(
+        batches, warm=True,
+        on_result=lambda i, out: pipe_results.setdefault(i, out),
     )
     bitwise = all(
         np.array_equal(pipe_results[i][0], serial_results[i][0])
@@ -172,20 +152,15 @@ def run(
     )
 
     # ---- fused-kernel lane (slot-stacked Pallas predict) ------------------
-    blend_fused = ss.make_sharded_blend(
-        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=True
+    cfg_fused = api.ServeConfig(
+        mode="sharded", pipeline="pipelined", router="single", backend="fused",
     )
-    policy_f = routing.StreamingQMax()
-    route_f, submit_f, collect_f = ss.make_request_stages(
-        grid, blend_fused, cache_sh, policy=policy_f
-    )
+    srv_fused = api.Server(fitted, cfg_fused)  # warns once: interpret on CPU
     fused_stream = batches[:fused_requests]
-    m_fu, v_fu = collect_f(submit_f(route_f(batches[0])))  # warm + compare
+    m_fu, v_fu = srv_fused.submit(batches[0])  # warm + compare
     fused_mean_err = float(np.abs(m_fu - serial_results[0][0]).max())
     fused_var_err = float(np.abs(v_fu - serial_results[0][1]).max())
-    pct_fused, qps_fused = ss.pipelined_request_loop(
-        route_f, submit_f, collect_f, fused_stream, warm=False
-    )
+    rec_fused = srv_fused.stream(fused_stream, warm=False)
 
     # ---- skew lanes: single-level vs two-level router under zipf ---------
     skew_rec = None
@@ -196,39 +171,27 @@ def run(
             grid, batch, requests, alpha=skew_alpha, seed=7
         )
 
-        def instrumented_stages(policy):
-            """Pipeline stages + per-table waste/spill accounting. The
-            warm pass compiles through the same stages, so counters are
-            zeroed after warmup and the stats cover the measured stream
-            exactly once."""
-            route0, submit0, collect0 = ss.make_request_stages(
-                grid, blend_fn, cache_sh, policy=policy
+        def skew_lane(router: str):
+            """One pipelined pass over the zipf stream. The warm pass
+            compiles through the same stages, so the server's table
+            counters are zeroed after warmup and the stats cover the
+            measured stream exactly once."""
+            cfg = api.ServeConfig(
+                mode="sharded", pipeline="pipelined", router=router,
+                backend="ref",
             )
-            stat = {"waste_rows": 0, "spilled": 0}
-
-            def route(q):
-                table, blocks = route0(q)
-                stat["waste_rows"] += table.waste_rows()
-                stat["spilled"] += table.num_spilled()
-                return table, blocks
-
-            return route, submit0, collect0, stat
-
-        def skew_lane(policy):
-            route, submit, collect, stat = instrumented_stages(policy)
-            results = {}
-            collect(submit(route(zbatches[0])))  # warm/compile
-            stat.update(waste_rows=0, spilled=0)
-            pct, qps = ss.pipelined_request_loop(
-                route, submit, collect, zbatches, warm=False,
+            srv = api.Server(fitted, cfg)
+            srv.submit(zbatches[0])  # warm/compile
+            srv.reset_stats()
+            results: dict = {}
+            rec = srv.stream(
+                zbatches, warm=False,
                 on_result=lambda i, out: results.setdefault(i, out),
             )
-            return pct, qps, stat, results
+            return cfg, rec, srv.stats(), results
 
-        pol_z1 = routing.StreamingQMax()
-        pct_z1, qps_z1, stat_z1, res_z1 = skew_lane(pol_z1)
-        pol_z2 = routing.TwoLevelQMax()
-        pct_z2, qps_z2, stat_z2, res_z2 = skew_lane(pol_z2)
+        cfg_z1, rec_z1, stat_z1, res_z1 = skew_lane("single")
+        cfg_z2, rec_z2, stat_z2, res_z2 = skew_lane("two-level")
 
         # the routers place queries differently, so only scatter-level
         # equality is meaningful: identical answers per request position
@@ -238,21 +201,18 @@ def run(
         )
         # two-level vs replicated on the first skewed batch
         mz, vz = res_z2[0]
-        mz_rep, vz_rep = predict_blended(
-            static, state, grid, jnp.asarray(zbatches[0]), cache=cache
-        )
-        z_mean_err = float(np.abs(mz - np.asarray(mz_rep)).max())
-        z_var_err = float(np.abs(vz - np.asarray(vz_rep)).max())
+        mz_rep, vz_rep = srv_rep.submit(zbatches[0])
+        z_mean_err = float(np.abs(mz - mz_rep).max())
+        z_var_err = float(np.abs(vz - vz_rep).max())
         # two-level pipelined bitwise == two-level serial (fresh policy ->
         # identical q_max trajectory)
-        route_zs, submit_zs, collect_zs = ss.make_request_stages(
-            grid, blend_fn, cache_sh, policy=routing.TwoLevelQMax()
-        )
+        srv_zs = api.Server(fitted, api.ServeConfig(
+            mode="sharded", pipeline="serial", router="two-level",
+            backend="ref",
+        ))
         z_bitwise = all(
             np.array_equal(out[j], res_z2[i][j])
-            for i, out in enumerate(
-                collect_zs(submit_zs(route_zs(b))) for b in zbatches
-            )
+            for i, out in enumerate(srv_zs.submit(b) for b in zbatches)
             for j in (0, 1)
         )
         skew_rec = {
@@ -262,14 +222,23 @@ def run(
             # policy's own cumulative total also includes the warm batch,
             # so it is dropped from the nested record — one number per fact)
             "single_level": {
-                **pct_z1, "points_per_s": qps_z1, **stat_z1,
-                "qmax_policy": pol_z1.stats(),
+                **rec_z1["latency_ms"],
+                "points_per_s": rec_z1["points_per_s"],
+                "waste_rows": stat_z1["waste_rows"],
+                "spilled": stat_z1["spilled"],
+                "qmax_policy": stat_z1["qmax_policy"],
+                "serve_config": cfg_z1.to_dict(),
             },
             "two_level": {
-                **pct_z2, "points_per_s": qps_z2, **stat_z2,
+                **rec_z2["latency_ms"],
+                "points_per_s": rec_z2["points_per_s"],
+                "waste_rows": stat_z2["waste_rows"],
+                "spilled": stat_z2["spilled"],
                 "qmax_policy": {
-                    k: v for k, v in pol_z2.stats().items() if k != "spilled"
+                    k: v for k, v in stat_z2["qmax_policy"].items()
+                    if k != "spilled"
                 },
+                "serve_config": cfg_z2.to_dict(),
             },
             "waste_reduction_vs_single": (
                 stat_z1["waste_rows"] / max(stat_z2["waste_rows"], 1)
@@ -287,32 +256,37 @@ def run(
         "P": grid.num_partitions,
         "m": m,
         "grid": f"{grid_side}x{grid_side}",
-        "mesh_devices": mesh.size,
+        "mesh_devices": srv_serial.mesh.size,
         "backend": jax.default_backend(),
         "batch": batch,
         "requests": requests,
+        "fit_config": fitted.config.to_dict(),
         "replicated": {
-            **pct_rep,
-            "points_per_s": qps_rep,
+            **rec_rep["latency_ms"],
+            "points_per_s": rec_rep["points_per_s"],
             "cache_bytes_per_device": total_b,
+            "serve_config": cfg_rep.to_dict(),
         },
         "sharded_serial": {
-            **pct_serial,
-            "points_per_s": qps_serial,
+            **rec_serial["latency_ms"],
+            "points_per_s": rec_serial["points_per_s"],
             "q_max": q_max,
             "cache_bytes_per_device": device_b,
             "cache_shard_ratio": total_b / max(device_b, 1),
+            "serve_config": cfg_serial.to_dict(),
         },
         "sharded_pipelined": {
-            **pct_pipe,
-            "points_per_s": qps_pipe,
-            "qmax_policy": policy.stats(),
+            **rec_pipe["latency_ms"],
+            "points_per_s": rec_pipe["points_per_s"],
+            "qmax_policy": rec_pipe["qmax_policy"],
+            "serve_config": cfg_pipe.to_dict(),
         },
         "sharded_pipelined_fused": {
-            **pct_fused,
-            "points_per_s": qps_fused,
+            **rec_fused["latency_ms"],
+            "points_per_s": rec_fused["points_per_s"],
             "requests": len(fused_stream),
             "interpret": not on_tpu,
+            "serve_config": cfg_fused.to_dict(),
         },
         "equivalence": {
             "max_abs_err_mean": mean_err,
@@ -323,7 +297,9 @@ def run(
             "fused_vs_jnp_max_abs_err_var": fused_var_err,
         },
         "speedup": {
-            "pipelined_vs_serial_p50": pct_serial["p50_ms"] / pct_pipe["p50_ms"],
+            "pipelined_vs_serial_p50": (
+                rec_serial["latency_ms"]["p50_ms"] / rec_pipe["latency_ms"]["p50_ms"]
+            ),
         },
         "skew": skew_rec,
     }
@@ -331,8 +307,12 @@ def run(
         # the PR-2 baseline was recorded on exactly this configuration —
         # a cross-shape ratio (--quick/--smoke) would be meaningless
         rec["baseline"] = {"pr2_sharded_p50_ms": PR2_SHARDED_P50_MS}
-        rec["speedup"]["serial_vs_pr2_p50"] = PR2_SHARDED_P50_MS / pct_serial["p50_ms"]
-        rec["speedup"]["pipelined_vs_pr2_p50"] = PR2_SHARDED_P50_MS / pct_pipe["p50_ms"]
+        rec["speedup"]["serial_vs_pr2_p50"] = (
+            PR2_SHARDED_P50_MS / rec_serial["latency_ms"]["p50_ms"]
+        )
+        rec["speedup"]["pipelined_vs_pr2_p50"] = (
+            PR2_SHARDED_P50_MS / rec_pipe["latency_ms"]["p50_ms"]
+        )
     print(json.dumps(rec, indent=2))
     with open(out_path, "w") as f:
         json.dump(rec, f, indent=2)

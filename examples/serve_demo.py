@@ -1,10 +1,14 @@
 """Serve a small model with batched requests.
 
-LM mode (default): prefill + decode loop on a smoke-sized architecture.
-GP mode (--gp): the paper's serving path — train the partitioned PSVGP
-surface and answer query batches from the cached factors; --sharded
-serves from the mesh-sharded cache through the overlapped pipeline
-(virtual devices on CPU).
+LM mode (default): prefill + decode loop on a smoke-sized architecture
+(subprocess shim over ``repro.launch.serve``).
+
+GP mode (--gp): the paper's full lifecycle through the ``repro.api``
+front door — fit the partitioned surface, SAVE the artifact, then serve
+query batches from the loaded artifact (``Server.from_artifact``; no
+retraining on the serving path). ``--sharded`` serves from the
+mesh-sharded cache through the overlapped pipeline (virtual devices on
+CPU).
 
   PYTHONPATH=src python examples/serve_demo.py --arch recurrentgemma-2b
   PYTHONPATH=src python examples/serve_demo.py --gp
@@ -13,6 +17,48 @@ serves from the mesh-sharded cache through the overlapped pipeline
 import argparse
 import subprocess
 import sys
+import tempfile
+
+
+def run_gp(sharded: bool) -> None:
+    # sharded mode maps one partition per device; on CPU the devices are
+    # virtual and must be forced before jax initializes
+    from repro.launch.serve_sharded import ensure_host_devices
+
+    grid_side = 4
+    if sharded:
+        ensure_host_devices(grid_side * grid_side)
+
+    import numpy as np
+
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=4000, seed=0)
+    fitted = api.fit(
+        api.FitConfig(grid=grid_side, m=6, train_iters=150), ds, verbose=True
+    )
+
+    rng = np.random.default_rng(1)
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+    batches = [
+        rng.uniform(lo, hi, (512, 2)).astype(np.float32) for _ in range(12)
+    ]
+
+    cfg = api.ServeConfig(
+        mode="sharded" if sharded else "replicated",
+        pipeline="pipelined" if sharded else "serial",
+    )
+    with tempfile.TemporaryDirectory() as td:
+        fitted.save(td)
+        server = api.Server.from_artifact(td, cfg)  # serving != training
+        report = server.stream(batches)
+    pct = report["latency_ms"]
+    print(f"served {len(batches)} requests x 512 points "
+          f"({cfg.mode}/{cfg.pipeline}, backend={report['backend']})")
+    print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
+          f"p95={pct['p95_ms']:.2f} p99={pct['p99_ms']:.2f}")
+    print(f"throughput: {report['points_per_s']:,.0f} points/s")
 
 
 def main() -> None:
@@ -22,26 +68,21 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--gp", action="store_true",
-                    help="serve the blended PSVGP surface instead of an LM")
+                    help="serve the blended PSVGP surface instead of an LM "
+                         "(fit -> save artifact -> Server.from_artifact)")
     ap.add_argument("--sharded", action="store_true",
                     help="GP mode: mesh-sharded cache + overlapped pipeline")
     args = ap.parse_args()
     if args.gp:
-        cmd = [
-            sys.executable, "-m", "repro.launch.serve", "--gp",
-            "--gp-grid", "4", "--gp-n", "4000", "--gp-m", "6",
-            "--gp-train-iters", "150", "--gp-batch", "512", "--gp-requests", "12",
-        ]
-        if args.sharded:
-            cmd.append("--sharded")
-    else:
-        cmd = [
-            sys.executable, "-m", "repro.launch.serve",
-            "--arch", args.arch, "--smoke",
-            "--batch", str(args.batch),
-            "--prompt-len", str(args.prompt_len),
-            "--gen", str(args.gen),
-        ]
+        run_gp(args.sharded)
+        return
+    cmd = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        "--batch", str(args.batch),
+        "--prompt-len", str(args.prompt_len),
+        "--gen", str(args.gen),
+    ]
     sys.exit(subprocess.call(cmd))
 
 

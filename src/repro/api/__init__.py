@@ -1,0 +1,40 @@
+"""repro.api — the one front door: fit -> artifact -> serve.
+
+The paper's in-situ lifecycle (train on the simulation, persist a
+parsimonious per-partition artifact, answer queries post hoc) as three
+objects instead of four flag-sprawled drivers:
+
+    from repro import api
+
+    fitted = api.fit(api.FitConfig(grid=8, m=10, train_iters=200), (x, y))
+    fitted.save("runs/e3sm_t42/")                 # few KB per partition
+
+    server = api.Server.from_artifact(
+        "runs/e3sm_t42/",
+        api.ServeConfig(mode="sharded", pipeline="pipelined",
+                        router="two-level", backend="auto"),
+    )
+    mean, var = server.submit(queries)            # one batch
+    report = server.stream(batches)               # stream + SLO report
+
+Every serving scenario — replicated vs sharded cache, serial vs
+overlapped pipeline, single vs two-level router, jnp vs Pallas kernel
+lane, streaming vs fixed q_max — is a :class:`ServeConfig` field; both
+configs validate on construction and round-trip through JSON, so a saved
+artifact or a benchmark row carries the exact session that produced it.
+The CLI entry points (``launch/serve.py --gp``, ``launch/serve_sharded``,
+``benchmarks/bench_serve``, ``examples/serve_demo.py``) are thin shims
+over this package. See docs/api.md.
+"""
+from repro.api.config import FitConfig, ServeConfig
+from repro.api.fitted import FittedPSVGP, fit, peek_fit_config
+from repro.api.server import Server
+
+__all__ = [
+    "FitConfig",
+    "ServeConfig",
+    "FittedPSVGP",
+    "Server",
+    "fit",
+    "peek_fit_config",
+]

@@ -1,0 +1,260 @@
+"""``fit`` and ``FittedPSVGP`` — train once, persist a parsimonious
+artifact, serve forever.
+
+The paper's in-situ story (§5/§6): the simulation trains the partitioned
+surface where the data lives, persists a FEW-KB-PER-PARTITION summary
+(inducing-point parameters + cached posterior factors — never the raw
+field), and analyses answer queries against that artifact post hoc. This
+module is that unit of exchange:
+
+    fitted = api.fit(FitConfig(grid=8, m=10), (x, y))   # train
+    fitted.save("runs/e3sm_t42/")                        # persist
+    ...
+    server = api.Server.from_artifact("runs/e3sm_t42/", ServeConfig(...))
+
+The artifact directory holds ``artifact.json`` (FitConfig + grid geometry,
+plain JSON — readable before jax initializes, which the sharded serving
+path needs to size its device mesh) next to the ``repro.checkpoint``
+npz/msgpack pytree of the trained parameters and the
+``repro.core.posterior.PosteriorCache`` factors. Loading rebuilds the
+serving bundle exactly: cached-factor prediction is bitwise-identical to
+the in-memory model (gated in tests/test_api.py), and no retraining or
+refactorization happens on the load path.
+
+A LOADED artifact is a serving object: ``predict`` and ``Server`` work in
+full, but the training-time topology tables (neighbor distribution,
+direction permutations) are not persisted — resume training from a
+``checkpoint.save_train_state`` checkpoint instead.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.config import FitConfig
+from repro.checkpoint import load_pytree, save_pytree
+from repro.core import posterior, psvgp, svgp
+from repro.core.blend import predict_blended
+from repro.core.partition import PartitionGrid, make_grid, partition_data
+from repro.gp.covariances import CovarianceParams, make_covariance
+from repro.optim import AdamState
+
+ARTIFACT_MANIFEST = "artifact.json"
+ARTIFACT_FORMAT = 1
+INPUT_DIM = 2  # spatial modeling: (lon, lat) / (x, y) coordinates
+
+
+def _psvgp_config(cfg: FitConfig) -> psvgp.PSVGPConfig:
+    """The one FitConfig -> PSVGPConfig mapping every entry point shares."""
+    return psvgp.PSVGPConfig(
+        svgp=svgp.SVGPConfig(
+            num_inducing=cfg.m,
+            input_dim=INPUT_DIM,
+            covariance=cfg.covariance,
+            jitter=cfg.jitter,
+            whitened=cfg.whitened,
+        ),
+        delta=cfg.delta,
+        batch_size=cfg.batch_size,
+        learning_rate=cfg.learning_rate,
+        comm=cfg.comm,
+        seed=cfg.seed,
+    )
+
+
+def _zeros(*shape) -> jnp.ndarray:
+    return jnp.zeros(shape, jnp.float32)
+
+
+def _artifact_templates(cfg: FitConfig) -> Tuple[svgp.SVGPParams, posterior.PosteriorCache]:
+    """Shape/dtype templates for the checkpointed pytrees — derived from the
+    FitConfig alone, which is why the manifest makes the artifact
+    self-describing (``checkpoint.load_pytree`` restores INTO a template)."""
+    P, m, d = cfg.num_partitions, cfg.m, INPUT_DIM
+    params = svgp.SVGPParams(
+        m_star=_zeros(P, m),
+        s_tril=_zeros(P, m, m),
+        z=_zeros(P, m, d),
+        cov=CovarianceParams(log_lengthscale=_zeros(P, d), log_variance=_zeros(P)),
+        log_beta=_zeros(P),
+    )
+    cache = posterior.PosteriorCache(
+        z=_zeros(P, m, d),
+        w=_zeros(P, m, m),
+        u=_zeros(P, m, m),
+        c=_zeros(P, m),
+        cov=CovarianceParams(log_lengthscale=_zeros(P, d), log_variance=_zeros(P)),
+        log_beta=_zeros(P),
+    )
+    return params, cache
+
+
+def peek_fit_config(path: str) -> FitConfig:
+    """Read an artifact's FitConfig WITHOUT touching jax.
+
+    The sharded serving path must force virtual host devices before the
+    jax backend initializes, and it needs the artifact's grid side to know
+    how many — this is the pure-JSON peek that makes
+    ``Server.from_artifact`` / ``serve --gp-artifact`` possible.
+    """
+    with open(os.path.join(path, ARTIFACT_MANIFEST)) as f:
+        manifest = json.load(f)
+    return FitConfig.from_dict(manifest["fit_config"])
+
+
+class FittedPSVGP:
+    """A trained partitioned surface: config + grid + params + cached factors.
+
+    Construct via :func:`fit` or :meth:`load`; hand to ``api.Server`` to
+    serve. Attributes:
+
+      config: the :class:`FitConfig` that produced (or describes) it.
+      grid:   the ``PartitionGrid`` the state was trained on.
+      static / state: the ``repro.core.psvgp`` bundle (training-time
+        ``static.dist``/``perms``/``p_dir`` are None on loaded artifacts).
+      cache:  the P-stacked ``PosteriorCache`` — factorized lazily once
+        (O(P m^3)) and reused by every prediction and by ``save``.
+    """
+
+    def __init__(
+        self,
+        config: FitConfig,
+        grid: PartitionGrid,
+        static: psvgp.PSVGPStatic,
+        state: psvgp.PSVGPState,
+        cache: posterior.PosteriorCache | None = None,
+    ):
+        self.config = config
+        self.grid = grid
+        self.static = static
+        self.state = state
+        self._cache = cache
+        # sharded-serving context (mesh, sharded cache, blend programs),
+        # built and memoized by api.Server — kept here so several Server
+        # views of one model (serial + pipelined lanes of a benchmark, say)
+        # share one device placement and one compile per kernel backend.
+        self._sharded_ctx: dict = {}
+
+    @property
+    def cache(self) -> posterior.PosteriorCache:
+        if self._cache is None:
+            self._cache = psvgp.posterior_cache(self.static, self.state)
+            jax.block_until_ready(self._cache)
+        return self._cache
+
+    def predict(self, points) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Replicated blended prediction at (N, 2) points -> (mean, var),
+        served from the cached factors (``blend.predict_blended``)."""
+        return predict_blended(
+            self.static, self.state, self.grid, points, cache=self.cache
+        )
+
+    def save(self, path: str) -> str:
+        """Persist the serving artifact to ``path`` (a directory).
+
+        Writes ``artifact.json`` (FitConfig + grid geometry) and the
+        checkpointed {params, cache} pytrees. Returns ``path``.
+        """
+        os.makedirs(path, exist_ok=True)
+        manifest = {
+            "format": ARTIFACT_FORMAT,
+            "fit_config": self.config.to_dict(),
+            "grid": {
+                "gx": int(self.grid.gx),
+                "gy": int(self.grid.gy),
+                "wrap_x": bool(self.grid.wrap_x),
+                "x_edges": np.asarray(self.grid.x_edges, np.float64).tolist(),
+                "y_edges": np.asarray(self.grid.y_edges, np.float64).tolist(),
+            },
+        }
+        with open(os.path.join(path, ARTIFACT_MANIFEST), "w") as f:
+            json.dump(manifest, f, indent=2)
+        save_pytree(path, {"params": self.state.params, "cache": self.cache})
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "FittedPSVGP":
+        """Restore a serving artifact saved by :meth:`save` — no
+        retraining, no refactorization; the cached factors come back
+        bitwise and the first prediction is O(Q m^2) like any other."""
+        with open(os.path.join(path, ARTIFACT_MANIFEST)) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != ARTIFACT_FORMAT:
+            raise ValueError(
+                f"artifact at {path!r} has format {manifest.get('format')!r}; "
+                f"this build reads format {ARTIFACT_FORMAT}"
+            )
+        config = FitConfig.from_dict(manifest["fit_config"])
+        g = manifest["grid"]
+        grid = PartitionGrid(
+            gx=int(g["gx"]),
+            gy=int(g["gy"]),
+            x_edges=np.asarray(g["x_edges"], np.float64),
+            y_edges=np.asarray(g["y_edges"], np.float64),
+            wrap_x=bool(g["wrap_x"]),
+        )
+        if grid.gx != config.grid or grid.gy != config.grid:
+            raise ValueError(
+                f"artifact grid {grid.gx}x{grid.gy} disagrees with its "
+                f"FitConfig grid={config.grid} — corrupt manifest"
+            )
+        params_t, cache_t = _artifact_templates(config)
+        tree = load_pytree(path, {"params": params_t, "cache": cache_t})
+        pcfg = _psvgp_config(config)
+        static = psvgp.PSVGPStatic(
+            cfg=pcfg,
+            cov_fn=make_covariance(config.covariance),
+            dist=None,  # training-time tables are not part of the artifact
+            perms=None,
+            p_dir=None,
+        )
+        state = psvgp.PSVGPState(
+            params=tree["params"],
+            opt=AdamState(step=jnp.zeros((), jnp.int32), mu=None, nu=None),
+            step=jnp.zeros((), jnp.int32),
+        )
+        return cls(config, grid, static, state, cache=tree["cache"])
+
+
+def fit(config: FitConfig, data: Any, *, verbose: bool = False) -> FittedPSVGP:
+    """Train a partitioned surface: ``FitConfig`` + data -> :class:`FittedPSVGP`.
+
+    Args:
+      config: the training recipe (grid side, m, delta, SGD budget, ...).
+      data: either an object with ``.x`` (N, 2) and ``.y`` (N,) attributes
+        (e.g. ``repro.data.spatial.SpatialDataset``) or an ``(x, y)`` tuple
+        of array-likes.
+      verbose: print the one-line training summary the serving drivers show.
+
+    The recipe is exactly the pre-api driver path (grid from the data's
+    bounding box, padded partition storage, ``psvgp.build``/``init``/
+    ``fit`` with ``PRNGKey(config.seed)``) — a fixed seed reproduces the
+    same trained state bitwise.
+    """
+    if hasattr(data, "x") and hasattr(data, "y"):
+        x, y = data.x, data.y
+    else:
+        x, y = data
+    x = np.asarray(x, np.float32)
+    if x.ndim != 2 or x.shape[1] != INPUT_DIM:
+        raise ValueError(f"data x must be (N, {INPUT_DIM}), got {x.shape}")
+    grid = make_grid(x, config.grid, config.grid)
+    pdata = partition_data(x, y, grid)
+    pcfg = _psvgp_config(config)
+    static = psvgp.build(pcfg, pdata)
+    state = psvgp.init(jax.random.PRNGKey(config.seed), pcfg, pdata)
+    t0 = time.time()
+    state = psvgp.fit(static, state, pdata, config.train_iters)
+    jax.block_until_ready(state.params)
+    if verbose:
+        print(
+            f"trained P={grid.num_partitions} partitions, m={config.m}, "
+            f"{config.train_iters} iters in {time.time() - t0:.1f} s"
+        )
+    return FittedPSVGP(config, grid, static, state)

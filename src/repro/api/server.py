@@ -1,0 +1,196 @@
+"""``Server`` — one front door for serving a fitted PSVGP.
+
+    server = Server(fitted, ServeConfig(mode="sharded", pipeline="pipelined"))
+    mean, var = server.submit(queries)           # one batch, blocking
+    report = server.stream(batches)              # a request stream + SLO report
+
+or, from a persisted artifact (no retraining anywhere on this path):
+
+    server = Server.from_artifact("runs/e3sm_t42/", ServeConfig(...))
+
+Internally the config dispatches to the SAME primitives the pre-api
+drivers composed by hand — ``blend.predict_blended`` for the replicated
+fast path; ``serve_sharded.make_sharded_blend`` + ``make_request_stages``
++ the serial/pipelined request loops for the mesh endpoint, with the
+router (``routing.StreamingQMax`` / ``TwoLevelQMax`` / fixed prepass
+q_max) and kernel backend chosen by the config — so results are
+bitwise-identical to the pre-refactor entry points (gated in
+tests/test_api.py). What changed is only who does the wiring: a new
+scenario is a ServeConfig field, not a new 600-line driver.
+
+Device-count contract: sharded mode needs one device per partition. On
+CPU those are virtual host devices that must be forced BEFORE the jax
+backend initializes — ``Server`` checks and raises with guidance
+(``serve_sharded.ensure_host_devices``), but a process that already ran
+jax work on too few devices cannot be fixed from here; CLI entry points
+call ``ensure_host_devices`` (sized via ``api.peek_fit_config`` for
+artifacts) first thing.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.api.config import ServeConfig
+from repro.api.fitted import FittedPSVGP
+
+
+class Server:
+    """Serve a :class:`FittedPSVGP` the way a :class:`ServeConfig` says to.
+
+    Attributes:
+      fitted / config: the model and the session config.
+      backend: the RESOLVED kernel lane ("ref" | "pallas" | "fused" —
+        ``ServeConfig.resolve_backend``).
+      policy: the streaming q_max policy routing this server's stream
+        (None in replicated mode and in the fixed-q_max lane).
+      mesh / cache_bytes: sharded mode only — the device mesh and the
+        (total, per-device) cache-factor memory.
+    """
+
+    def __init__(self, fitted: FittedPSVGP, config: ServeConfig | None = None):
+        self.fitted = fitted
+        self.config = ServeConfig() if config is None else config
+        self.backend = self.config.resolve_backend()
+        self.policy = None
+        self.mesh = None
+        self.cache_bytes: Optional[Tuple[int, int]] = None
+        self._stats = {"requests": 0, "waste_rows": 0, "spilled": 0}
+        if self.config.mode == "sharded":
+            self._init_sharded()
+        else:
+            fitted.cache  # factorize up front, off the request path
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_artifact(cls, path: str, config: ServeConfig | None = None) -> "Server":
+        """``FittedPSVGP.load`` + ``Server`` in one step — the post-hoc
+        analysis entry point: serve a persisted artifact without ever
+        touching training."""
+        return cls(FittedPSVGP.load(path), config)
+
+    def _init_sharded(self) -> None:
+        from repro.launch import serve_sharded as ss
+
+        grid = self.fitted.grid
+        ss.ensure_host_devices(grid.num_partitions)
+        ctx = self.fitted._sharded_ctx
+        if "mesh" not in ctx:
+            ctx["mesh"] = ss.mesh_for_grid(grid)
+            cache_sh = ss.shard_cache(self.fitted.cache, ctx["mesh"])
+            jax.block_until_ready(cache_sh)
+            ctx["cache_sh"] = cache_sh
+        if ("blend", self.backend) not in ctx:
+            ctx[("blend", self.backend)] = ss.make_sharded_blend(
+                ctx["mesh"],
+                ctx["mesh"].axis_names,
+                grid,
+                self.fitted.static.cov_fn,
+                ctx["cache_sh"],
+                backend=self.backend,
+            )
+        self.mesh = ctx["mesh"]
+        self.cache_bytes = ss.cache_memory_bytes(ctx["cache_sh"])
+        self.policy = self.config.make_policy()
+        route0, self._submit_stage, self._collect_stage = ss.make_request_stages(
+            grid,
+            ctx[("blend", self.backend)],
+            ctx["cache_sh"],
+            policy=self.policy,
+            q_max=self.config.q_max,
+            pad_multiple=self.config.pad_multiple,
+        )
+
+        def route(q):
+            table, blocks = route0(q)
+            self._stats["requests"] += 1
+            self._stats["waste_rows"] += table.waste_rows()
+            self._stats["spilled"] += table.num_spilled()
+            return table, blocks
+
+        self._route_stage = route
+
+    # -- serving -----------------------------------------------------------
+
+    def submit(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+        """Answer one query batch (N, 2), blocking: (mean (N,), var (N,))."""
+        if self.config.mode == "sharded":
+            return self._collect_stage(self._submit_stage(self._route_stage(queries)))
+        self._stats["requests"] += 1
+        mean, var = self.fitted.predict(queries)
+        jax.block_until_ready((mean, var))
+        return np.asarray(mean), np.asarray(var)
+
+    def stream(self, batches, *, warm: bool = True, on_result: Callable | None = None) -> dict:
+        """Serve a request stream through the configured loop; return the
+        SLO report.
+
+        Dispatch: sharded+pipelined runs the overlapped double-buffered
+        driver (``serve_sharded.pipelined_request_loop`` — batch t+1
+        routes on the host while the mesh evaluates batch t); everything
+        else runs the synchronous ``timed_request_loop``. Results are
+        delivered through ``on_result(i, (mean, var))`` in stream order
+        (bitwise-identical between the two loops — overlap is scheduling,
+        never math).
+
+        ``warm=True`` runs batches[0] once before timing (compile +
+        transfer warmup); pass ``warm=False`` when the caller already ran
+        a batch (e.g. for an equivalence gate). The warm pass is not
+        reported to ``on_result`` and not counted in the latency record.
+
+        Returns ``{"serve_config", "backend", "latency_ms": {p50,p95,p99},
+        "points_per_s", "qmax_policy"}``.
+        """
+        from repro.launch import serve_sharded as ss
+
+        if self.config.mode == "sharded" and self.config.pipeline == "pipelined":
+            pct, qps = ss.pipelined_request_loop(
+                self._route_stage, self._submit_stage, self._collect_stage,
+                batches, warm=warm, on_result=on_result,
+            )
+        else:
+            if warm:
+                self.submit(batches[0])
+            if on_result is None:
+                answer = self.submit
+            else:
+                idx = {"i": 0}
+
+                def answer(q):
+                    out = self.submit(q)
+                    on_result(idx["i"], out)
+                    idx["i"] += 1
+                    return out
+
+            pct, qps = ss.timed_request_loop(answer, batches, warm=False)
+        rec = {
+            "serve_config": self.config.to_dict(),
+            "backend": self.backend,
+            "latency_ms": pct,
+            "points_per_s": qps,
+            "qmax_policy": (
+                {"q_max": int(self.config.q_max), "fixed": True}
+                if self.policy is None and self.config.mode == "sharded"
+                else self.policy.stats() if self.policy is not None else None
+            ),
+        }
+        return rec
+
+    # -- introspection -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Cumulative serving counters: requests routed, padded-row waste
+        and spilled queries (from each request's RoutingTable), plus the
+        q_max policy record. ``reset_stats`` zeroes the table counters —
+        benchmark lanes do that after their warm pass so the report covers
+        the measured stream exactly once."""
+        rec = dict(self._stats)
+        if self.policy is not None:
+            rec["qmax_policy"] = self.policy.stats()
+        return rec
+
+    def reset_stats(self) -> None:
+        self._stats.update(requests=0, waste_rows=0, spilled=0)

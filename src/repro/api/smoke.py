@@ -1,0 +1,101 @@
+"""api-smoke — the end-to-end proof of the fit -> artifact -> serve
+lifecycle (the CI ``api-smoke`` step; ``make api-smoke``).
+
+Fits a toy 4x4 model, SAVES the artifact, then serves requests through
+``Server.from_artifact`` — i.e. from the loaded artifact, never the
+in-memory model — in BOTH modes:
+
+  * replicated: loaded predictions must be BITWISE-identical to the
+    in-memory model's (the artifact round-trip contract);
+  * sharded (pipelined, two-level router, auto backend): must match the
+    replicated answers to float32 accuracy on every request.
+
+Exits non-zero on any violation. Seconds-scale on CPU (the 16 mesh
+devices are virtual host devices, forced before jax initializes).
+
+  PYTHONPATH=src python -m repro.api.smoke
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+
+def run(*, grid: int = 4, m: int = 5, n: int = 1500, train_iters: int = 150,
+        requests: int = 5, batch: int = 256, seed: int = 0) -> None:
+    # virtual devices for the sharded half — before any jax computation
+    from repro.launch.serve_sharded import ensure_host_devices
+
+    ensure_host_devices(grid * grid)
+
+    import numpy as np
+
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=n, seed=seed)
+    fitted = api.fit(
+        api.FitConfig(grid=grid, m=m, train_iters=train_iters, seed=seed),
+        ds, verbose=True,
+    )
+
+    rng = np.random.default_rng(seed + 1)
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+    batches = [
+        rng.uniform(lo, hi, (batch, 2)).astype(np.float32) for _ in range(requests)
+    ]
+
+    with tempfile.TemporaryDirectory() as td:
+        fitted.save(td)
+        print(f"artifact saved: grid={grid}x{grid}, m={m}")
+
+        # replicated, from the artifact: bitwise == the in-memory model
+        # (the in-memory predictions double as the sharded lane's reference)
+        rep = api.Server.from_artifact(td, api.ServeConfig(mode="replicated"))
+        reference = []
+        for i, q in enumerate(batches):
+            m_l, v_l = rep.submit(q)
+            m_m, v_m = (np.asarray(a) for a in fitted.predict(q))
+            reference.append((m_m, v_m))
+            assert np.array_equal(m_l, m_m), f"replicated mean differs (batch {i})"
+            assert np.array_equal(v_l, v_m), f"replicated var differs (batch {i})"
+        print(f"replicated from_artifact: {requests} requests bitwise == in-memory")
+
+        # sharded, from the artifact: float32-accurate vs replicated
+        sh = api.Server.from_artifact(
+            td,
+            api.ServeConfig(mode="sharded", pipeline="pipelined",
+                            router="two-level", backend="auto"),
+        )
+        results: dict = {}
+        sh.stream(batches, warm=True, on_result=lambda i, out: results.setdefault(i, out))
+        err = max(
+            max(
+                float(np.abs(results[i][0] - m_m).max()),
+                float(np.abs(results[i][1] - v_m).max()),
+            )
+            for i, (m_m, v_m) in enumerate(reference)
+        )
+        assert err <= 1e-4, f"sharded from_artifact drifted from replicated: {err:.2e}"
+        print(f"sharded from_artifact ({sh.backend} backend, "
+              f"{sh.config.router} router): {requests} requests, "
+              f"max |err| vs replicated = {err:.2e}")
+    print("api-smoke OK")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--grid", type=int, default=4, help="partition grid side (devices = grid^2)")
+    ap.add_argument("--m", type=int, default=5, help="inducing points per partition")
+    ap.add_argument("--n", type=int, default=1500, help="training observations")
+    ap.add_argument("--train-iters", type=int, default=150)
+    ap.add_argument("--requests", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    a = ap.parse_args()
+    run(grid=a.grid, m=a.m, n=a.n, train_iters=a.train_iters,
+        requests=a.requests, batch=a.batch, seed=a.seed)
+
+
+if __name__ == "__main__":
+    main()

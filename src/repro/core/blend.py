@@ -92,18 +92,6 @@ def corner_ids_weights(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray
     return ids, w
 
 
-def _corner_ids_weights(grid: PartitionGrid, pts: np.ndarray):
-    """Deprecated alias of :func:`corner_ids_weights` (pre-PR-2 private name)."""
-    import warnings
-
-    warnings.warn(
-        "blend._corner_ids_weights is deprecated; use blend.corner_ids_weights",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return corner_ids_weights(grid, pts)
-
-
 @functools.partial(jax.jit, static_argnames=("cov_fn",))
 def _blend_eval(
     cache: posterior.PosteriorCache,

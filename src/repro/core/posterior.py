@@ -211,6 +211,22 @@ def predict_cached_stacked(
     )(cache, xstar)
 
 
+def resolve_slot_backend(use_pallas: bool, backend: str | None) -> str:
+    """Normalize the (legacy ``use_pallas`` bool, ``backend`` name) pair to
+    one kernel lane: "ref" | "pallas" | "fused". The ONE definition of the
+    mapping — :func:`predict_cached_slots` and
+    ``serve_sharded.make_sharded_blend`` both validate through it, so the
+    lane vocabulary cannot drift between the prediction and serving layers.
+    """
+    if backend is None:
+        return "fused" if use_pallas else "ref"
+    if use_pallas:
+        raise ValueError("pass either use_pallas or backend=, not both")
+    if backend not in ("ref", "pallas", "fused"):
+        raise ValueError(f"backend must be 'ref'|'pallas'|'fused', got {backend!r}")
+    return backend
+
+
 def predict_cached_slots(
     cache: PosteriorCache,
     cov_fn: Callable,
@@ -218,35 +234,56 @@ def predict_cached_slots(
     *,
     include_noise: bool = False,
     use_pallas: bool = False,
+    backend: str | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ONE model evaluated on S stacked query blocks: xslots (S, Q, d).
 
     This is the device-side serving hot path: the sharded blend evaluates
-    the local model on all 9 halo slots at once. With ``use_pallas`` the
-    whole stack is a SINGLE fused Pallas launch whose grid spans
-    (S x q-blocks) with W/U/c resident across the grid
-    (``repro.kernels.predict.posterior_predict_slots_pallas``) — no
-    (S*Q, d) reshape round-trip and no per-slot re-staging of the factors.
-    The jnp path is a vmap of :func:`predict_cached` over the slot axis.
+    the local model on all 9 halo slots at once. Three kernel lanes,
+    selected by ``backend`` (the ``repro.api.ServeConfig`` vocabulary;
+    the legacy ``use_pallas`` bool maps True -> "fused", False -> "ref"
+    and may not be combined with an explicit ``backend``):
+
+      "ref"    — pure jnp: a vmap of :func:`predict_cached` over the slot
+                 axis (every covariance; the XLA-compiled CPU lane).
+      "pallas" — the fused single-block Pallas predict kernel
+                 (``kernels.ops.posterior_predict``) through a (S*Q, d)
+                 reshape round-trip: one launch, but the factor tiles are
+                 re-staged per q-block across the flattened stack.
+      "fused"  — a SINGLE slot-stacked Pallas launch whose grid spans
+                 (S x q-blocks) with W/U/c resident across the whole grid
+                 (``repro.kernels.predict.posterior_predict_slots_pallas``)
+                 — no reshape round-trip, no per-slot re-staging; the TPU
+                 production lane.
 
     Returns (fmean (S, Q), fvar (S, Q)); fvar clamped to >= 1e-12.
-    Non-RBF covariances raise under ``use_pallas`` (see
+    Non-RBF covariances raise on the Pallas lanes (see
     ``repro.kernels.ops.require_rbf``).
     """
-    if use_pallas:
-        from repro.kernels import ops as kops
+    backend = resolve_slot_backend(use_pallas, backend)
+    if backend == "ref":
+        return jax.vmap(
+            lambda xs: predict_cached(cache, cov_fn, xs, include_noise=include_noise)
+        )(xslots)
+    from repro.kernels import ops as kops
 
+    if backend == "fused":
         fmean, fvar = kops.posterior_predict_slots(
             xslots, cache.z, cache.cov.log_lengthscale, cache.cov.log_variance,
             cache.w, cache.u, cache.c, cov_fn=cov_fn,
         )
-        fvar = jnp.maximum(fvar, 1e-12)
-        if include_noise:
-            fvar = fvar + jnp.exp(-cache.log_beta)
-        return fmean, fvar
-    return jax.vmap(
-        lambda xs: predict_cached(cache, cov_fn, xs, include_noise=include_noise)
-    )(xslots)
+    else:  # "pallas": flatten the stack through the single-block kernel
+        S, Q, d = xslots.shape
+        fmean, fvar = kops.posterior_predict(
+            xslots.reshape(S * Q, d), cache.z,
+            cache.cov.log_lengthscale, cache.cov.log_variance,
+            cache.w, cache.u, cache.c, cov_fn=cov_fn,
+        )
+        fmean, fvar = fmean.reshape(S, Q), fvar.reshape(S, Q)
+    fvar = jnp.maximum(fvar, 1e-12)
+    if include_noise:
+        fvar = fvar + jnp.exp(-cache.log_beta)
+    return fmean, fvar
 
 
 def take_cache(cache: PosteriorCache, ids: jnp.ndarray) -> PosteriorCache:

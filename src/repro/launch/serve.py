@@ -5,10 +5,13 @@ serving mode for the stitched PSVGP surface.
       --batch 4 --prompt-len 64 --gen 32
 
 GP mode (the paper's E3SM in-situ setting: train the partitioned surface,
-then answer query batches at serving rates). Trains a PSVGP on the
-synthetic E3SM-like field, factorizes all local posteriors ONCE into a
-``repro.core.posterior.PosteriorCache``, and runs a batched query loop
-against the cached factors with a latency/throughput report:
+then answer query batches at serving rates). A thin shim over
+``repro.api``: the flags parse into a ``FitConfig``/``ServeConfig``,
+``api.fit`` trains the PSVGP on the synthetic E3SM-like field (all local
+posteriors factorized ONCE into a ``PosteriorCache``; ``--gp-save`` /
+``--gp-artifact`` persist and reuse the trained artifact), and
+``api.Server`` runs the batched query loop with a latency/throughput
+report:
 
   PYTHONPATH=src python -m repro.launch.serve --gp \
       --gp-grid 8 --gp-m 10 --gp-train-iters 200 \
@@ -38,41 +41,31 @@ from repro.runtime.steps import init_train_state, make_decode_step, make_prefill
 
 
 def serve_gp(args) -> None:
-    """Batched query loop over the blended PSVGP surface (cached factors)."""
-    from repro.core import psvgp
-    from repro.core.blend import predict_blended
-    from repro.launch.serve_sharded import train_demo_surface
+    """Batched query loop over the blended PSVGP surface — a thin shim
+    over ``repro.api``: fit (or load) the artifact, then serve the request
+    stream through a replicated ``api.Server``."""
+    from repro import api
+    from repro.launch.serve_sharded import load_or_train, query_batches
 
-    ds, grid, data, static, state = train_demo_surface(
-        seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
-        m=args.gp_m, train_iters=args.gp_train_iters,
-    )
+    ds, fitted = load_or_train(args)
 
     t0 = time.time()
-    cache = psvgp.posterior_cache(static, state)
-    jax.block_until_ready(cache)
-    print(f"posterior cache built in {(time.time()-t0)*1e3:.1f} ms "
-          f"(one O(P m^3) factorization, reused by every request)")
+    server = api.Server(fitted, api.ServeConfig(mode="replicated"))
+    if ds is not None:
+        print(f"posterior cache built in {(time.time()-t0)*1e3:.1f} ms "
+              f"(one O(P m^3) factorization, reused by every request)")
+    else:
+        print("posterior cache restored from the artifact "
+              "(no factorization at serve time)")
 
     # synthetic request stream: uniform query batches over the domain
-    rng = np.random.default_rng(args.seed + 1)
-    lo = ds.x.min(axis=0)
-    hi = ds.x.max(axis=0)
-    B = args.gp_batch
-    batches = [
-        jnp.asarray(rng.uniform(lo, hi, (B, 2)).astype(np.float32))
-        for _ in range(args.gp_requests)
-    ]
-
-    def answer(q):
-        out = predict_blended(static, state, grid, q, cache=cache)
-        jax.block_until_ready(out)
-        return out
-
-    from repro.launch.serve_sharded import timed_request_loop
-
-    pct, qps = timed_request_loop(answer, batches)
-    print(f"served {args.gp_requests} requests x {B} points")
+    batches = query_batches(
+        fitted.grid, ds, batch=args.gp_batch, requests=args.gp_requests,
+        seed=args.seed, skew=getattr(args, "gp_skew", 0.0),
+    )
+    report = server.stream(batches)
+    pct, qps = report["latency_ms"], report["points_per_s"]
+    print(f"served {args.gp_requests} requests x {args.gp_batch} points")
     print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
           f"p95={pct['p95_ms']:.2f} p99={pct['p99_ms']:.2f}")
     print(f"throughput: {qps:,.0f} points/s")

@@ -47,6 +47,13 @@ Communication per request per device: 4 nearest-neighbor collectives
 carrying 8 result pairs — O(q_max) floats, independent of P. The factors,
 like the variational parameters during training, never move.
 
+The CLI at the bottom is a thin shim over ``repro.api``: the flags parse
+into a ``FitConfig``/``ServeConfig`` and ``api.Server`` composes the
+stages defined here (this module remains the sharded-serving ENGINE —
+mesh construction, the shard_map blend program, the request stages and
+the serial/pipelined loops). ``--gp-save``/``--gp-artifact`` persist and
+reuse the trained artifact (``api.FittedPSVGP``).
+
 Usage (CPU dry-run; the grid is mapped one-partition-per-device onto
 gy x gx virtual host devices):
 
@@ -202,6 +209,7 @@ def make_sharded_blend(
     cache_like: posterior.PosteriorCache,
     *,
     use_pallas: bool = False,
+    backend: str | None = None,
 ):
     """Build the jitted shard_map serving program.
 
@@ -219,8 +227,11 @@ def make_sharded_blend(
     ``routing.predict_routed`` and, through it, ``blend.predict_blended``.
 
     The device program evaluates the local model on all 9 slots at once
-    (``posterior.predict_cached_slots``; one fused Pallas launch when
-    ``use_pallas`` — TPU only, validated RBF-only) and returns the results
+    (``posterior.predict_cached_slots`` with the chosen kernel ``backend``
+    — "ref" jnp, "pallas" single-block kernel via reshape, "fused" one
+    slot-stacked launch; the legacy ``use_pallas`` bool maps True ->
+    "fused". Pallas lanes compile to Mosaic on TPU only and are validated
+    RBF-only) and returns the results
     over the COMPOSED reverse halo: slot k's evaluation must travel to the
     owner at offset OFFSETS[k], and because a diagonal hop is an x-hop
     then a y-hop, the whole 3x3 neighborhood moves in 4 ppermutes — one
@@ -238,7 +249,8 @@ def make_sharded_blend(
         )
     if grid.wrap_x:
         raise NotImplementedError("wrapped grids need ring perms for the halo")
-    if use_pallas:
+    backend = posterior.resolve_slot_backend(use_pallas, backend)
+    if backend != "ref":
         from repro.kernels import ops as kops
 
         kops.require_rbf(cov_fn)  # fail at build time, not trace time
@@ -251,7 +263,7 @@ def make_sharded_blend(
         q = h.shape[1]
         # 1. one slot-stacked local evaluation of all nine blocks
         mean, var = posterior.predict_cached_slots(
-            local, cov_fn, h, use_pallas=use_pallas
+            local, cov_fn, h, backend=backend
         )
         ev = jnp.stack([mean, var], axis=1)  # (9, 2, q): one halo payload
         # 2. composed reverse halo. The owner at offset OFFSETS[k] needs MY
@@ -295,30 +307,22 @@ def train_demo_surface(
     """The ONE training recipe every serving driver/benchmark demos against
     (``serve --gp``, ``serve --gp --sharded``, ``benchmarks.bench_serve``):
     a PSVGP with the paper-flavored delta=0.25 on the synthetic E3SM-like
-    field. Keeping it shared is what makes the replicated-vs-sharded
-    equivalence checks compare the SAME posterior.
+    field, trained through ``repro.api.fit``. Keeping it shared is what
+    makes the replicated-vs-sharded equivalence checks compare the SAME
+    posterior.
 
-    Returns (ds, grid, data, static, state).
+    Returns (ds, fitted) — the dataset (for query-domain bounds) and the
+    ``repro.api.FittedPSVGP`` serving bundle.
     """
-    from repro.core import psvgp, svgp
-    from repro.core.partition import make_grid, partition_data
+    from repro import api
     from repro.data.spatial import e3sm_like_field
 
     ds = e3sm_like_field(n=n, seed=seed)
-    grid = make_grid(ds.x, grid_side, grid_side)
-    data = partition_data(ds.x, ds.y, grid)
-    cfg = psvgp.PSVGPConfig(
-        svgp=svgp.SVGPConfig(num_inducing=m, input_dim=2),
-        delta=0.25, batch_size=32, learning_rate=0.05,
+    fitted = api.fit(
+        api.FitConfig(grid=grid_side, m=m, train_iters=train_iters, seed=seed),
+        ds, verbose=True,
     )
-    static = psvgp.build(cfg, data)
-    state = psvgp.init(jax.random.PRNGKey(seed), cfg, data)
-    t0 = time.time()
-    state = psvgp.fit(static, state, data, train_iters)
-    jax.block_until_ready(state.params)
-    print(f"trained P={grid.num_partitions} partitions, m={m}, "
-          f"{train_iters} iters in {time.time()-t0:.1f} s")
-    return ds, grid, data, static, state
+    return ds, fitted
 
 
 def make_request_stages(
@@ -328,6 +332,7 @@ def make_request_stages(
     *,
     policy: routing.StreamingQMax | None = None,
     q_max: int | None = None,
+    pad_multiple: int | None = None,
 ):
     """Split a request into the three pipeline stages the overlapped driver
     schedules (and the serial driver runs back-to-back):
@@ -349,7 +354,12 @@ def make_request_stages(
                       back to request order. The ONLY sync point.
 
     Exactly one of ``policy`` (live stream) / ``q_max`` (whole-stream
-    prepass, ``fixed_q_max``) must be given. A
+    prepass, ``fixed_q_max``) must be given. ``pad_multiple`` is the
+    block-size alignment ``build_routing_table`` applies; it defaults to
+    the POLICY's own alignment (so the policy's q_max high-water mark is
+    never re-rounded — its compile/overflow counters always describe the
+    block shapes actually compiled), or to the table default of 8 in the
+    fixed-q_max lane. A
     :class:`routing.TwoLevelQMax` policy routes TWO-LEVEL: hot-cell
     overflow beyond the (post-spill) q_max budget is re-hosted on the
     queries' corner-cell neighbors, so a skewed stream no longer pads
@@ -360,6 +370,8 @@ def make_request_stages(
     """
     if (policy is None) == (q_max is None):
         raise ValueError("pass exactly one of policy= (streaming) or q_max= (fixed)")
+    if pad_multiple is None:
+        pad_multiple = policy.pad_multiple if policy is not None else 8
     stacker = routing.make_halo_stacker(grid)
     two_level = isinstance(policy, routing.TwoLevelQMax)
     if two_level:
@@ -374,16 +386,20 @@ def make_request_stages(
             qm, hosts = policy.fit_spill(grid, own, corners[0])
             table = routing.build_routing_table(
                 grid, pts, q_max=qm, cells=cells, corners=corners,
-                spill=True, hosts=hosts,
+                spill=True, hosts=hosts, pad_multiple=pad_multiple,
             )
         elif policy is not None:
             counts = np.bincount(
                 cells[1] * grid.gx + cells[0], minlength=grid.num_partitions
             )
             qm = policy.fit(counts)
-            table = routing.build_routing_table(grid, pts, q_max=qm, cells=cells)
+            table = routing.build_routing_table(
+                grid, pts, q_max=qm, cells=cells, pad_multiple=pad_multiple
+            )
         else:
-            table = routing.build_routing_table(grid, pts, q_max=q_max, cells=cells)
+            table = routing.build_routing_table(
+                grid, pts, q_max=q_max, cells=cells, pad_multiple=pad_multiple
+            )
         return table, (stacker(table.xq), table.corner_slot, table.corner_w)
 
     def submit(routed):
@@ -459,84 +475,122 @@ def pipelined_request_loop(
     return pct, sum(len(q) for q in batches) / wall
 
 
-def serve_sharded(args) -> dict:
-    """Train, shard the cache over the mesh, and run the routed query loop.
-
-    Mirrors ``serve.serve_gp`` (same flags) but serves from the distributed
-    cache through the overlapped pipeline (``--gp-serial`` falls back to
-    the synchronous loop); prints and returns the latency/throughput
-    record, including an allclose check against the replicated path on the
-    first batch and the streaming-q_max policy counters.
+def load_or_train(args, *, ensure_devices: bool = False):
+    """The shared fit-or-load front of both GP serving CLIs: returns
+    (ds, fitted) where ds is None when serving from a persisted artifact
+    (``--gp-artifact``; no retraining on that path). ``--gp-save``
+    persists the freshly trained artifact. ``ensure_devices`` (the
+    sharded caller) forces one virtual device per artifact partition and
+    MUST then run before any other jax work — the artifact's grid side is
+    peeked from pure JSON so the count can be forced first.
     """
-    ensure_host_devices(args.gp_grid * args.gp_grid)
+    from repro import api
 
-    from repro.core import psvgp
-    from repro.core.blend import predict_blended
+    if getattr(args, "gp_artifact", None):
+        if ensure_devices:
+            ensure_host_devices(api.peek_fit_config(args.gp_artifact).num_partitions)
+        fitted = api.FittedPSVGP.load(args.gp_artifact)
+        print(f"loaded artifact {args.gp_artifact}: grid="
+              f"{fitted.grid.gx}x{fitted.grid.gy}, m={fitted.config.m} "
+              "(serving without retraining)")
+        ds = None
+    else:
+        ds, fitted = train_demo_surface(
+            seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
+            m=args.gp_m, train_iters=args.gp_train_iters,
+        )
+    if getattr(args, "gp_save", None):
+        fitted.save(args.gp_save)
+        print(f"artifact saved to {args.gp_save}")
+    return ds, fitted
 
-    ds, grid, data, static, state = train_demo_surface(
-        seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
-        m=args.gp_m, train_iters=args.gp_train_iters,
-    )
-    cache = psvgp.posterior_cache(static, state)
-    mesh = mesh_for_grid(grid)
-    cache_sh = shard_cache(cache, mesh)
-    jax.block_until_ready(cache_sh)
-    total_b, device_b = cache_memory_bytes(cache_sh)
-    print(f"cache sharded over {mesh.size} devices: {total_b/1e6:.2f} MB total, "
-          f"{device_b/1e3:.1f} kB/device (1/{total_b // max(device_b,1)} of replicated)")
 
-    use_pallas = jax.default_backend() == "tpu"
-    blend_fn = make_sharded_blend(
-        mesh, mesh.axis_names, grid, static.cov_fn, cache_sh, use_pallas=use_pallas
-    )
-
-    B = args.gp_batch
-    skew = getattr(args, "gp_skew", 0.0)
+def query_batches(
+    grid: PartitionGrid, ds=None, *, batch: int, requests: int,
+    seed: int = 0, skew: float = 0.0,
+) -> list:
+    """The demo query stream the GP serving CLIs draw: zipf-skewed over
+    cells when ``skew`` > 0 (the ``--gp-skew`` exponent), else uniform
+    over the data domain (``ds``) or the grid bounds (``ds=None`` — the
+    artifact-serving case, where no dataset exists). Plain parameters, so
+    non-CLI callers can reuse it without fabricating an argparse
+    namespace."""
     if skew > 0:
         from repro.data.spatial import zipf_query_stream
 
-        batches = zipf_query_stream(
-            grid, B, args.gp_requests, alpha=skew, seed=args.seed + 1
-        )
-    else:
-        rng = np.random.default_rng(args.seed + 1)
+        return zipf_query_stream(grid, batch, requests, alpha=skew, seed=seed + 1)
+    rng = np.random.default_rng(seed + 1)
+    if ds is not None:
         lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
-        batches = [
-            rng.uniform(lo, hi, (B, 2)).astype(np.float32)
-            for _ in range(args.gp_requests)
-        ]
-    if getattr(args, "gp_router", "single") == "two-level":
-        policy = routing.TwoLevelQMax()
     else:
-        policy = routing.StreamingQMax()
-    route, submit, collect = make_request_stages(
-        grid, blend_fn, cache_sh, policy=policy
+        lo = np.array([grid.x_edges[0], grid.y_edges[0]], np.float32)
+        hi = np.array([grid.x_edges[-1], grid.y_edges[-1]], np.float32)
+    return [
+        rng.uniform(lo, hi, (batch, 2)).astype(np.float32)
+        for _ in range(requests)
+    ]
+
+
+def serve_sharded(args) -> dict:
+    """Fit (or load) through ``repro.api`` and serve the routed query loop
+    from the mesh-sharded cache — this CLI is a thin shim: flags parse
+    into a ``ServeConfig`` and ``api.Server`` does the wiring.
+
+    Mirrors ``serve.serve_gp`` (same flags) but serves from the
+    distributed cache through the overlapped pipeline (``--gp-serial``
+    falls back to the synchronous loop); prints and returns the
+    latency/throughput record, including an allclose check against the
+    replicated path on the first batch and the streaming-q_max policy
+    counters.
+    """
+    if not getattr(args, "gp_artifact", None):
+        ensure_host_devices(args.gp_grid * args.gp_grid)
+    # (the artifact path sizes the device count from the artifact's own
+    # grid — load_or_train peeks it from pure JSON before any jax work)
+
+    from repro import api
+
+    ds, fitted = load_or_train(args, ensure_devices=True)
+    grid = fitted.grid
+    serve_cfg = api.ServeConfig(
+        mode="sharded",
+        pipeline="serial" if getattr(args, "gp_serial", False) else "pipelined",
+        router=getattr(args, "gp_router", "single"),
+        backend="auto",
+    )
+    server = api.Server(fitted, serve_cfg)
+    total_b, device_b = server.cache_bytes
+    print(f"cache sharded over {server.mesh.size} devices: {total_b/1e6:.2f} MB total, "
+          f"{device_b/1e3:.1f} kB/device (1/{total_b // max(device_b,1)} of replicated)")
+
+    skew = getattr(args, "gp_skew", 0.0)
+    batches = query_batches(
+        grid, ds, batch=args.gp_batch, requests=args.gp_requests,
+        seed=args.seed, skew=skew,
     )
 
     # warmup + equivalence check against the replicated path
-    m0, v0 = collect(submit(route(batches[0])))
-    m_rep, v_rep = predict_blended(static, state, grid, jnp.asarray(batches[0]))
+    m0, v0 = server.submit(batches[0])
+    m_rep, v_rep = fitted.predict(jnp.asarray(batches[0]))
     mean_err = float(np.abs(m0 - np.asarray(m_rep)).max())
     var_err = float(np.abs(v0 - np.asarray(v_rep)).max())
     print(f"sharded vs replicated on warmup batch: max|dmean|={mean_err:.2e} "
           f"max|dvar|={var_err:.2e}")
 
     # already warmed: the equivalence check above compiled and ran batch 0
-    serial = getattr(args, "gp_serial", False)
-    if serial:
-        pct, qps = timed_request_loop(
-            lambda q: collect(submit(route(q))), batches, warm=False
-        )
-    else:
-        pct, qps = pipelined_request_loop(route, submit, collect, batches, warm=False)
+    report = server.stream(batches, warm=False)
+    pct, qps = report["latency_ms"], report["points_per_s"]
+    policy = server.policy
     rec = {
         "mesh": f"{grid.gy}x{grid.gx}",
-        "devices": mesh.size,
-        "mode": "serial" if serial else "pipelined",
-        "router": "two-level" if isinstance(policy, routing.TwoLevelQMax) else "single",
+        "devices": server.mesh.size,
+        "mode": serve_cfg.pipeline,
+        "router": serve_cfg.router,
+        "backend": server.backend,
+        "serve_config": serve_cfg.to_dict(),
         "skew_alpha": skew,
         "qmax_policy": policy.stats(),
-        "waste_rows_last_batch": mesh.size * policy.q_max - B,
+        "waste_rows_last_batch": server.mesh.size * policy.q_max - args.gp_batch,
         "latency_ms": pct,
         "points_per_s": qps,
         "mean_err_vs_replicated": mean_err,
@@ -544,7 +598,7 @@ def serve_sharded(args) -> dict:
         "cache_bytes_total": total_b,
         "cache_bytes_per_device": device_b,
     }
-    print(f"served {args.gp_requests} requests x {B} points "
+    print(f"served {args.gp_requests} requests x {args.gp_batch} points "
           f"({rec['mode']}; q_max={policy.q_max}, "
           f"{policy.compiles} compiles, {policy.overflows} overflows)")
     print(f"latency/request ms: p50={pct['p50_ms']:.2f} "
@@ -655,6 +709,15 @@ def add_gp_args(ap: argparse.ArgumentParser) -> None:
                          "hot-cell overflow onto corner-cell neighbors "
                          "(routing.TwoLevelQMax), capping padded-row waste "
                          "under skewed streams")
+    ap.add_argument("--gp-save", metavar="DIR", default=None,
+                    help="persist the trained artifact (repro.api "
+                         "FittedPSVGP.save: FitConfig + grid + params + "
+                         "cached factors) to DIR after training")
+    ap.add_argument("--gp-artifact", metavar="DIR", default=None,
+                    help="serve from a persisted artifact instead of "
+                         "training (repro.api Server.from_artifact); "
+                         "ignores the --gp-n/--gp-m/--gp-train-iters "
+                         "training flags")
 
 
 def main() -> None:

@@ -1,14 +1,12 @@
 """Query routing for distributed serving (repro.core.routing) + the public
 corner_ids_weights API it is built on."""
-import warnings
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import posterior, psvgp, routing, svgp
-from repro.core.blend import _corner_ids_weights, corner_ids_weights, predict_blended
+from repro.core.blend import corner_ids_weights, predict_blended
 from repro.core.partition import make_grid, partition_data
 from repro.data.spatial import e3sm_like_field
 from repro.gp.covariances import make_covariance
@@ -23,8 +21,8 @@ def _grid_and_queries(gx=5, gy=4, n=613, seed=3):
 
 def test_corner_ids_weights_public_api():
     """Weights are a partition of unity; ids always name the 4 cell-center
-    corners surrounding the point; the deprecated private alias still works
-    (and warns)."""
+    corners surrounding the point. The pre-PR-2 private alias
+    ``_corner_ids_weights`` is gone (removed after its deprecation cycle)."""
     grid, pts = _grid_and_queries()
     ids, w = corner_ids_weights(grid, pts)
     assert ids.shape == (len(pts), 4) and w.shape == (len(pts), 4)
@@ -38,12 +36,9 @@ def test_corner_ids_weights_public_api():
     dy = ids // grid.gx - iy[:, None]
     assert (np.abs(dx) <= 1).all() and (np.abs(dy) <= 1).all()
 
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        ids2, w2 = _corner_ids_weights(grid, pts)
-    assert any(issubclass(c.category, DeprecationWarning) for c in caught)
-    np.testing.assert_array_equal(ids, ids2)
-    np.testing.assert_array_equal(w, w2)
+    from repro.core import blend
+
+    assert not hasattr(blend, "_corner_ids_weights")
 
 
 def test_routing_table_round_trip():
