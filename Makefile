@@ -1,10 +1,13 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check lint api-smoke bench-predict bench-serve bench-serve-smoke bench-gate
+.PHONY: test test-full docs-check lint analyze api-smoke bench-predict bench-serve bench-serve-smoke bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
+
+analyze:         ## static verification: HLO invariants, repo AST rules, trace-time contracts -> ANALYSIS.json
+	$(PY) -m repro.analysis
 
 api-smoke:       ## fit a toy model, save, serve the loaded artifact (replicated + sharded)
 	$(PY) -m repro.api.smoke

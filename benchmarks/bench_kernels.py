@@ -40,7 +40,7 @@ def run(out_dir: str = "benchmarks/results") -> list:
 
         got = ops.svgp_projection(x, z, lls, lv, lmm)
         want = ops.svgp_projection_ref(x, z, lls, lv, lmm)
-        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want))
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want, strict=True))
 
         # unfused reference: knm written to HBM then re-read for projection
         ref_fn = jax.jit(lambda *a: ops.svgp_projection_ref(*a))

@@ -18,7 +18,6 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ from repro.core.partition import make_grid, partition_data
 from repro.data.spatial import e3sm_like_field
 
 
-def _predict_blended_seed(static, state, grid, points) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _predict_blended_seed(static, state, grid, points) -> tuple[jnp.ndarray, jnp.ndarray]:
     """The seed implementation, verbatim: per-point svgp.predict closure —
     one Kmm Cholesky per point per corner (the baseline being replaced)."""
     pts = np.asarray(points, np.float32)
@@ -50,7 +49,7 @@ def _predict_blended_seed(static, state, grid, points) -> Tuple[jnp.ndarray, jnp
 
         return jax.vmap(one)(params_c, jnp.asarray(pts))
 
-    means, varis = zip(*(eval_corner(c) for c in range(4)))
+    means, varis = zip(*(eval_corner(c) for c in range(4)), strict=True)
     means = jnp.stack(means, axis=1)  # (N, 4)
     varis = jnp.stack(varis, axis=1)
     mean = jnp.sum(w * means, axis=1)

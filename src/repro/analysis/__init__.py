@@ -1,0 +1,71 @@
+"""repro.analysis — static verification of the serving stack's invariants.
+
+The PSVGP serving claims are STRUCTURAL: factors never move, the halo
+exchange is O(1) ppermutes, no all-gather on the hot path, routing stays
+host-side numpy, nothing touches the device at import time. This package
+checks those properties without executing the mesh — compiled-artifact and
+source-level analysis, cheap enough to run on every push:
+
+  pass 1  ``hlo``        AOT-lower every ServeConfig lane on abstract
+                         inputs and enforce the declarative per-lane
+                         invariant manifest (``invariants.LANES``) on the
+                         StableHLO text: collective budget, forbidden ops,
+                         dtype policy, host-transfer detection.
+  pass 2  ``ast``        repo-rule source lint (``astlint``): the bugs this
+                         repo has already shipped, codified as named rules
+                         RR001..RR004 with file/line diagnostics and a
+                         ``# repro: noqa-RRxxx`` escape hatch.
+  pass 3  ``contracts``  trace-time shape/spec contracts: ``@contract``
+                         declarations on the serving entry points, checked
+                         via ``jax.eval_shape`` over the config matrix —
+                         zero runtime cost in production.
+
+One front door::
+
+    PYTHONPATH=src python -m repro.analysis            # all three passes
+    make analyze                                       # same, via Makefile
+
+writes ``ANALYSIS.json`` (per-lane op counts, per-rule findings) and exits
+non-zero on any violation, so CI can diff invariant drift the same way
+``benchmarks/check_bench_regression.py`` gates p50.
+
+This module is stdlib-only at import time (``Finding`` + the pass
+registry); the jax-touching passes live in submodules imported by the
+CLI — which must be able to force virtual host devices BEFORE the jax
+backend initializes, exactly like the sharded serving entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PASSES = ("hlo", "ast", "contracts")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: which pass, which rule, where, and what happened.
+
+    ``where`` is ``path:line`` for source findings and ``lane:<name>`` for
+    compiled-artifact findings — both stable strings a CI diff of
+    ANALYSIS.json can key on.
+    """
+
+    pass_name: str  # "hlo" | "ast" | "contracts"
+    rule: str  # e.g. "RR001", "HLO-FORBIDDEN-OP", "CONTRACT-SHAPE"
+    where: str
+    message: str
+
+    def __post_init__(self) -> None:
+        if self.pass_name not in PASSES:
+            raise ValueError(f"pass_name must be one of {PASSES}, got {self.pass_name!r}")
+        if not (self.rule and self.where and self.message):
+            raise ValueError("rule/where/message must be non-empty")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.where}: {self.message}"
+
+
+__all__ = ["Finding", "PASSES"]

@@ -1,0 +1,116 @@
+"""One front door for the static verification layer.
+
+    PYTHONPATH=src python -m repro.analysis                 # all passes
+    PYTHONPATH=src python -m repro.analysis --passes ast    # source lint only
+    make analyze                                            # CI entry point
+
+Runs the three passes (HLO invariant linter, repo-rule AST lint,
+trace-time contracts), prints every finding, writes ``ANALYSIS.json``
+(per-lane collective counts, per-rule tallies, findings) and exits
+non-zero iff anything was found — so CI both gates on it and can diff
+invariant drift between pushes, the way
+``benchmarks/check_bench_regression.py`` gates p50.
+
+Virtual host devices are forced BEFORE anything jax-backed is imported
+(the hlo/contracts passes lower real mesh programs), exactly like the
+sharded serving entry points.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="PSVGP static verification: HLO invariants, repo-rule "
+        "AST lint, trace-time contracts.",
+    )
+    ap.add_argument(
+        "--passes",
+        default="hlo,ast,contracts",
+        help="comma-separated subset of hlo,ast,contracts (default: all)",
+    )
+    ap.add_argument(
+        "--grid", type=int, default=4, help="probe grid side (devices = grid^2)"
+    )
+    ap.add_argument("--m", type=int, default=8, help="inducing points per partition")
+    ap.add_argument("--q-max", type=int, default=64, help="probe block size")
+    ap.add_argument(
+        "--root", default="src", help="source root for the AST pass"
+    )
+    ap.add_argument(
+        "--out",
+        default="ANALYSIS.json",
+        help="JSON report path ('' to skip writing)",
+    )
+    return ap
+
+
+def main(argv=None) -> int:
+    from repro.analysis import PASSES
+
+    args = build_parser().parse_args(argv)
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = set(passes) - set(PASSES)
+    if unknown:
+        print(f"unknown passes {sorted(unknown)}; choose from {PASSES}")
+        return 2
+
+    needs_mesh = "hlo" in passes or "contracts" in passes
+    if needs_mesh:
+        # must precede any jax backend touch (see ensure_host_devices)
+        from repro.launch.serve_sharded import ensure_host_devices
+
+        ensure_host_devices(args.grid * args.grid)
+
+    t0 = time.time()
+    findings = []
+    report = {"passes": {}}
+    if "hlo" in passes:
+        from repro.analysis import hlo
+
+        fs, rep = hlo.run(grid_side=args.grid, m=args.m, q_max=args.q_max)
+        findings.extend(fs)
+        report["passes"]["hlo"] = rep
+        print(f"[hlo]       {len(rep['lanes'])} lanes, "
+              f"{len(rep['programs_lowered'])} programs lowered, "
+              f"{len(fs)} finding(s) in {rep['seconds']}s")
+    if "ast" in passes:
+        from repro.analysis import astlint
+
+        fs, rep = astlint.run(args.root)
+        findings.extend(fs)
+        report["passes"]["ast"] = rep
+        print(f"[ast]       {rep['files_scanned']} files, "
+              f"{len(fs)} finding(s)")
+    if "contracts" in passes:
+        from repro.analysis import contracts
+
+        fs, rep = contracts.run(grid_side=args.grid, m=args.m)
+        findings.extend(fs)
+        report["passes"]["contracts"] = rep
+        print(f"[contracts] {len(rep['targets_checked'])} targets, "
+              f"{len(fs)} finding(s) in {rep['seconds']}s")
+
+    report["findings"] = [f.to_dict() for f in findings]
+    report["total_findings"] = len(findings)
+    report["seconds"] = round(time.time() - t0, 3)
+
+    for f in findings:
+        print(f"  {f}")
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"report -> {args.out}")
+    verdict = "CLEAN" if not findings else f"{len(findings)} VIOLATION(S)"
+    print(f"analysis: {verdict} ({report['seconds']}s)")
+    return 0 if not findings else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

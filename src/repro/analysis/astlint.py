@@ -1,0 +1,397 @@
+"""Pass 2 — repo-rule AST lint: the bugs this repo has shipped, as rules.
+
+Every rule is a named, tested codification of a failure mode from the PR
+history, with file/line diagnostics and a per-line escape hatch
+(``# repro: noqa-RRxxx`` on the flagged line):
+
+  RR001  no device-array creation at module import time. The
+         ``gp/likelihoods.py`` bug (PR 2): a ``jnp.asarray`` at module
+         scope initializes the jax backend before the launcher can set
+         ``XLA_FLAGS``, silently pinning the device count to 1.
+  RR002  the routing path stays pure numpy. The ``device_put``-inside-
+         ``route`` bug: any jax reference in a declared host-side routing
+         function moves routing onto the device and stalls the overlapped
+         pipeline. Enforced for a declared function list (deleting a
+         declared function is itself a finding, so the list can't rot).
+  RR003  no bare float64 in kernel/serve hot paths. The serving dtype
+         policy is f32; an f64 literal/astype doubles halo bytes and drops
+         the TPU fast path. (The HLO pass catches leaks that reach a
+         compiled program; this catches them at the source.)
+  RR004  frozen-config dataclasses must validate in ``__post_init__``. A
+         frozen config without construction-time validation lets an
+         illegal combination travel to the middle of a serve run before
+         failing (the pre-PR-5 flag-sprawl class of bug).
+
+Pure stdlib (``ast``): this pass never imports the code it checks.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis import Finding
+
+RULES = ("RR001", "RR002", "RR003", "RR004")
+
+NOQA_PREFIX = "# repro: noqa-"
+
+# --- RR001: jax roots whose CALL at import time touches the backend.
+# jax.jit / jax.vmap / functools.partial(jax.jit, ...) are lazy and fine;
+# array constructors and device queries are not.
+_VALUE_ROOTS = ("jax.numpy.", "jax.random.")
+_DEVICE_CALLS = (
+    "jax.device_put",
+    "jax.devices",
+    "jax.device_count",
+    "jax.local_devices",
+    "jax.local_device_count",
+    "jax.make_mesh",
+)
+
+# --- RR002: declared pure-numpy routing path, keyed by path suffix.
+# Dotted names descend into nested defs (closures) and class bodies.
+PURE_NUMPY_FUNCTIONS = {
+    "repro/core/routing.py": (
+        "owning_cells",
+        "ceil_to",
+        "halo_ids",
+        "spill_assign",
+        "min_spill_q_max",
+        "build_routing_table",
+        "halo_slot_on_grid",
+        "make_halo_stacker",
+        "scatter_results",
+        "StreamingQMax",
+        "TwoLevelQMax",
+    ),
+    # the route stage built by make_request_stages is the pipeline's
+    # host-side overlap window — one jax call here serializes the loop
+    "repro/launch/serve_sharded.py": ("make_request_stages.route",),
+}
+
+# --- RR003: files whose math must stay f32 end to end.
+HOT_PATH_SUFFIXES = (
+    "repro/kernels/",
+    "repro/core/posterior.py",
+    "repro/core/blend.py",
+    "repro/core/routing.py",
+    "repro/launch/serve.py",
+    "repro/launch/serve_sharded.py",
+    "repro/api/server.py",
+)
+
+
+def _norm(path: str) -> str:
+    return path.replace(os.sep, "/")
+
+
+def _suppressed(lines: list, lineno: int, rule: str) -> bool:
+    if 1 <= lineno <= len(lines):
+        return NOQA_PREFIX + rule in lines[lineno - 1]
+    return False
+
+
+def jax_aliases(tree: ast.Module) -> dict:
+    """Map of local name -> dotted origin, for every jax-rooted binding.
+
+    ``import jax.numpy as jnp`` -> {"jnp": "jax.numpy"};
+    ``from jax import random`` -> {"random": "jax.random"};
+    ``from jax.random import PRNGKey`` -> {"PRNGKey": "jax.random.PRNGKey"}.
+    """
+    aliases: dict = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax" or a.name.startswith("jax."):
+                    aliases[(a.asname or a.name).split(".")[0]] = (
+                        a.name if a.asname else "jax"
+                    )
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and (node.module == "jax" or node.module.startswith("jax.")):
+                for a in node.names:
+                    aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _dotted(node: ast.AST, aliases: dict):
+    """Resolve an Attribute/Name chain to its dotted origin, or None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name) or node.id not in aliases:
+        return None
+    parts.append(aliases[node.id])
+    return ".".join(reversed(parts))
+
+
+def _annotation_nodes(tree: ast.AST) -> set:
+    """ids of every node inside a type annotation (skipped by RR002)."""
+    out: set = set()
+
+    def mark(sub):
+        if sub is not None:
+            for n in ast.walk(sub):
+                out.add(id(n))
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            mark(node.returns)
+            for arg in [
+                *node.args.posonlyargs,
+                *node.args.args,
+                *node.args.kwonlyargs,
+                node.args.vararg,
+                node.args.kwarg,
+            ]:
+                if arg is not None:
+                    mark(arg.annotation)
+        elif isinstance(node, ast.AnnAssign):
+            mark(node.annotation)
+    return out
+
+
+# --------------------------------------------------------------------------
+# RR001 — no device-array creation at import time
+# --------------------------------------------------------------------------
+
+
+def _import_time_statements(tree: ast.Module):
+    """Module-scope and class-body statements plus function default args —
+    everything Python EXECUTES at import. Function/method bodies are lazy
+    and skipped; so are decorators (``partial(jax.jit, ...)`` is lazy)."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.ClassDef):
+            stack.extend(node.body)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield from (d for d in node.args.defaults if d is not None)
+            yield from (d for d in node.args.kw_defaults if d is not None)
+        else:
+            yield node
+
+
+def _check_rr001(path: str, tree: ast.Module, lines: list) -> list:
+    aliases = jax_aliases(tree)
+    if not aliases:
+        return []
+    findings = []
+    for stmt in _import_time_statements(tree):
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue  # lazy bodies nested under a module-scope stmt
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func, aliases)
+            if dotted is None:
+                continue
+            bad = dotted.startswith(_VALUE_ROOTS) or dotted in _DEVICE_CALLS
+            if bad and not _suppressed(lines, node.lineno, "RR001"):
+                findings.append(
+                    Finding(
+                        "ast",
+                        "RR001",
+                        f"{path}:{node.lineno}",
+                        f"{dotted}(...) at import time initializes the jax "
+                        "backend before the launcher can configure it "
+                        "(XLA_FLAGS/device count are frozen at first touch) "
+                        "— move it behind a function",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# RR002 — declared routing functions stay pure numpy
+# --------------------------------------------------------------------------
+
+
+def _find_def(scope: ast.AST, dotted: str):
+    node = scope
+    for part in dotted.split("."):
+        nxt = None
+        for child in ast.walk(node):
+            if (
+                isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef))
+                and child.name == part
+                and child is not node
+            ):
+                nxt = child
+                break
+        if nxt is None:
+            return None
+        node = nxt
+    return node
+
+
+def _check_rr002(path: str, tree: ast.Module, lines: list, declared: tuple) -> list:
+    aliases = jax_aliases(tree)
+    findings = []
+    for name in declared:
+        target = _find_def(tree, name)
+        if target is None:
+            findings.append(
+                Finding(
+                    "ast",
+                    "RR002",
+                    f"{path}:1",
+                    f"declared pure-numpy routing function {name!r} not "
+                    "found — update astlint.PURE_NUMPY_FUNCTIONS alongside "
+                    "the rename/removal",
+                )
+            )
+            continue
+        # local imports inside the function count too
+        local = dict(aliases)
+        local.update(jax_aliases(ast.Module(body=list(target.body), type_ignores=[])))
+        if not local:
+            continue
+        ann = _annotation_nodes(target)
+        for node in ast.walk(target):
+            if id(node) in ann:
+                continue
+            if isinstance(node, ast.Name) and node.id in local:
+                if not _suppressed(lines, node.lineno, "RR002"):
+                    findings.append(
+                        Finding(
+                            "ast",
+                            "RR002",
+                            f"{path}:{node.lineno}",
+                            f"jax reference {node.id!r} "
+                            f"({local[node.id]}) inside routing-path "
+                            f"function {name!r} — routing must stay "
+                            "host-side numpy or the pipeline overlap "
+                            "window collapses",
+                        )
+                    )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# RR003 — no bare float64 in hot paths
+# --------------------------------------------------------------------------
+
+
+def _check_rr003(path: str, tree: ast.Module, lines: list) -> list:
+    findings = []
+
+    def flag(lineno, what):
+        if not _suppressed(lines, lineno, "RR003"):
+            findings.append(
+                Finding(
+                    "ast",
+                    "RR003",
+                    f"{path}:{lineno}",
+                    f"{what} in a serving/kernel hot path — the serving "
+                    "dtype policy is f32 (halo bytes double, TPU fast "
+                    "path lost)",
+                )
+            )
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            flag(node.lineno, "float64 dtype attribute")
+        elif isinstance(node, ast.Name) and node.id == "float64":
+            flag(node.lineno, "bare float64 name")
+        elif isinstance(node, ast.Constant) and node.value == "float64":
+            flag(node.lineno, 'dtype string "float64"')
+    return findings
+
+
+# --------------------------------------------------------------------------
+# RR004 — frozen-config dataclasses validate in __post_init__
+# --------------------------------------------------------------------------
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        fn = dec.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else getattr(fn, "id", None)
+        if name != "dataclass":
+            continue
+        for kw in dec.keywords:
+            if (
+                kw.arg == "frozen"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+            ):
+                return True
+    return False
+
+
+def _check_rr004(path: str, tree: ast.Module, lines: list) -> list:
+    findings = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef) and _is_frozen_dataclass(node)):
+            continue
+        has_post = any(
+            isinstance(m, ast.FunctionDef) and m.name == "__post_init__"
+            for m in node.body
+        )
+        if not has_post and not _suppressed(lines, node.lineno, "RR004"):
+            findings.append(
+                Finding(
+                    "ast",
+                    "RR004",
+                    f"{path}:{node.lineno}",
+                    f"frozen dataclass {node.name!r} has no __post_init__ "
+                    "— frozen configs must validate at construction, not "
+                    "mid-serve when the illegal combination finally bites",
+                )
+            )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def lint_source(path: str, source: str, *, rules: tuple = RULES) -> list:
+    """Lint one file's source. ``path`` keys the per-file rule config
+    (suffix-matched), so fixtures can pose as any repo file."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("ast", "RR-PARSE", f"{path}:{e.lineno or 1}", str(e))]
+    lines = source.splitlines()
+    norm = _norm(path)
+    findings = []
+    if "RR001" in rules:
+        findings.extend(_check_rr001(path, tree, lines))
+    if "RR002" in rules:
+        for suffix, declared in PURE_NUMPY_FUNCTIONS.items():
+            if norm.endswith(suffix):
+                findings.extend(_check_rr002(path, tree, lines, declared))
+    if "RR003" in rules and any(s in norm for s in HOT_PATH_SUFFIXES):
+        findings.extend(_check_rr003(path, tree, lines))
+    if "RR004" in rules:
+        findings.extend(_check_rr004(path, tree, lines))
+    return findings
+
+
+def run(root: str = "src", *, rules: tuple = RULES) -> tuple:
+    """Lint every .py under ``root``; returns (findings, report)."""
+    findings = []
+    files = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            files.append(path)
+            with open(path, encoding="utf-8") as f:
+                findings.extend(lint_source(path, f.read(), rules=rules))
+    per_rule = {r: 0 for r in rules}
+    for f in findings:
+        per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+    report = {
+        "root": root,
+        "files_scanned": len(files),
+        "rules": list(rules),
+        "findings_per_rule": per_rule,
+    }
+    return findings, report

@@ -1,0 +1,571 @@
+"""Pass 3 — trace-time shape/sharding contracts on the serving entry points.
+
+A ``@contract(...)`` decorator declares, next to the code, what shapes a
+serving entry point consumes and produces (``"(S, Q)"``-style expressions,
+symbols unified across a declaration) plus named cross-stage invariants.
+The decorator only REGISTERS the declaration and returns the function
+unchanged — zero runtime cost in production. This pass then checks every
+declaration against the real code via ``jax.eval_shape`` on abstract
+inputs (device programs) or direct execution on tiny host arrays (the
+numpy routing stages), over the whole backend/policy matrix.
+
+The point is the desync class of bug: the PR-5 ``pad_multiple`` incident
+(the routing table silently re-rounded q_max, so the streaming policy's
+compile/overflow counters described block shapes that were never
+compiled) was invisible to unit tests of either side — it lived in the
+SEAM between the host stages and the device program. The contracts here
+check the seams:
+
+  * ``predict_cached_slots``   (S, Q) outputs, f32, on every kernel lane;
+  * ``make_sharded_blend``     the built program's in/out shapes, per
+                               backend, via eval_shape — no execution;
+  * ``make_request_stages``    route's table/blocks agree with the policy
+                               (q_max never re-rounded) AND with what the
+                               compiled blend accepts, per policy kind;
+  * ``scatter_results``        the exact inverse property: gather-by-table
+                               then scatter restores request order.
+
+A declaration is load-bearing twice over: deleting a ``@contract`` from an
+expected target is itself a finding (``EXPECTED_TARGETS``), and every
+shape expression in a declaration is parsed and unified against reality —
+a stale string fails the pass.
+
+Import-light: this module is stdlib+numpy at import time (core modules
+import it for the decorator); jax loads only inside harnesses.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import re
+import time
+
+import numpy as np
+
+from repro.analysis import Finding
+
+# --------------------------------------------------------------------------
+# Declaration machinery
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+# Every target that must carry a @contract. Removing a decorator (or
+# renaming a target) without updating this list is a CONTRACT-MISSING
+# finding — the declaration cannot silently rot away.
+EXPECTED_TARGETS = (
+    "repro.core.posterior.predict_cached_slots",
+    "repro.core.routing.scatter_results",
+    "repro.launch.serve_sharded.make_sharded_blend",
+    "repro.launch.serve_sharded.make_request_stages",
+)
+
+# Named invariants a declaration may claim; the harnesses enforce exactly
+# these. Declaring an unknown name is a finding (both sides stay in sync).
+KNOWN_INVARIANTS = (
+    "q_max-matches-policy",  # route never re-rounds the policy's q_max
+    "q_max-aligned",  # table.q_max % pad_multiple == 0
+    "scatter-is-gather-inverse",  # scatter(gather(x)) == x exactly
+    "outputs-f32",  # serving math returns float32
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractDecl:
+    target: str  # "module.qualname"
+    spec: dict  # shape expressions + invariant names, per target kind
+
+    def __post_init__(self) -> None:
+        if not self.target or "." not in self.target:
+            raise ValueError(f"target must be module.qualname, got {self.target!r}")
+        if not isinstance(self.spec, dict) or not self.spec:
+            raise ValueError(f"empty contract spec for {self.target}")
+
+
+def contract(**spec):
+    """Declare a serving contract. Registers and returns ``fn`` unchanged."""
+
+    def deco(fn):
+        target = f"{fn.__module__}.{fn.__qualname__}"
+        _REGISTRY[target] = ContractDecl(target=target, spec=spec)
+        return fn
+
+    return deco
+
+
+# --------------------------------------------------------------------------
+# Shape-expression parsing and unification
+# --------------------------------------------------------------------------
+
+_DIM_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_]*$")
+
+
+def parse_shape(expr: str) -> tuple:
+    """'(S, Q, 4)' -> ('S', 'Q', 4); '(N,)' -> ('N',)."""
+    body = expr.strip()
+    if not (body.startswith("(") and body.endswith(")")):
+        raise ValueError(f"shape expression must be parenthesized: {expr!r}")
+    parts = [p.strip() for p in body[1:-1].split(",") if p.strip()]
+    dims = []
+    for p in parts:
+        if p.lstrip("-").isdigit():
+            dims.append(int(p))
+        elif _DIM_RE.match(p):
+            dims.append(p)
+        else:
+            raise ValueError(f"bad dimension {p!r} in {expr!r}")
+    return tuple(dims)
+
+
+def unify(expr: str, shape: tuple, env: dict):
+    """Unify a shape expression with an actual shape under ``env``.
+
+    Literal dims must match exactly; symbolic dims bind on first use and
+    must agree thereafter. Returns an error string, or None on success.
+    ``env`` is updated in place so one declaration's symbols are shared
+    across all its expressions.
+    """
+    dims = parse_shape(expr)
+    if len(dims) != len(shape):
+        return f"rank mismatch: {expr} vs actual {tuple(shape)}"
+    for d, s in zip(dims, shape, strict=True):
+        s = int(s)
+        if isinstance(d, int):
+            if d != s:
+                return f"{expr} vs actual {tuple(shape)}: literal {d} != {s}"
+        elif d in env:
+            if env[d] != s:
+                return (
+                    f"{expr} vs actual {tuple(shape)}: {d}={env[d]} "
+                    f"bound earlier, got {s}"
+                )
+        else:
+            env[d] = s
+    return None
+
+
+def _check_invariant_names(decl: ContractDecl) -> list:
+    bad = [
+        n for n in decl.spec.get("invariants", ()) if n not in KNOWN_INVARIANTS
+    ]
+    if bad:
+        return [
+            Finding(
+                "contracts",
+                "CONTRACT-DECL",
+                f"target:{decl.target}",
+                f"declares unknown invariants {bad} — add the check to "
+                "contracts.KNOWN_INVARIANTS (and a harness) or fix the "
+                "declaration",
+            )
+        ]
+    return []
+
+
+# --------------------------------------------------------------------------
+# Harnesses
+# --------------------------------------------------------------------------
+
+
+def _shape_finding(target: str, lane: str, err: str) -> Finding:
+    return Finding(
+        "contracts", "CONTRACT-SHAPE", f"target:{target}", f"[{lane}] {err}"
+    )
+
+
+def _local_abstract_cache(m: int, d: int = 2):
+    """A SINGLE-partition abstract cache (what one device's step sees)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import posterior
+    from repro.gp.covariances import CovarianceParams
+
+    def f32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    return posterior.PosteriorCache(
+        z=f32(m, d),
+        w=f32(m, m),
+        u=f32(m, m),
+        c=f32(m),
+        cov=CovarianceParams(log_lengthscale=f32(d), log_variance=f32()),
+        log_beta=f32(),
+    )
+
+
+def harness_predict_cached_slots(decl: ContractDecl, *, m: int = 8) -> list:
+    """eval_shape the slot-stacked predict on every kernel lane."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import posterior
+    from repro.gp.covariances import make_covariance
+
+    findings = _check_invariant_names(decl)
+    cov_fn = make_covariance("rbf")
+    cache = _local_abstract_cache(m)
+    S, Q, D = 9, 16, 2
+    xslots = jax.ShapeDtypeStruct((S, Q, D), jnp.float32)
+    for backend in ("ref", "pallas", "fused"):
+
+        def fn(c, xs, _backend=backend):
+            return posterior.predict_cached_slots(c, cov_fn, xs, backend=_backend)
+
+        try:
+            out = jax.eval_shape(fn, cache, xslots)
+        except Exception as e:  # a lane that no longer traces is a finding
+            findings.append(
+                Finding(
+                    "contracts",
+                    "CONTRACT-TRACE",
+                    f"target:{decl.target}",
+                    f"[{backend}] abstract trace failed: {e}",
+                )
+            )
+            continue
+        env = {"S": S, "Q": Q, "D": D}
+        for expr, leaf in zip(decl.spec.get("returns", ()), out, strict=True):
+            err = unify(expr, leaf.shape, env)
+            if err:
+                findings.append(_shape_finding(decl.target, backend, err))
+            if (
+                "outputs-f32" in decl.spec.get("invariants", ())
+                and leaf.dtype != jnp.float32
+            ):
+                findings.append(
+                    Finding(
+                        "contracts",
+                        "CONTRACT-DTYPE",
+                        f"target:{decl.target}",
+                        f"[{backend}] output dtype {leaf.dtype}, policy is f32",
+                    )
+                )
+    return findings
+
+
+def harness_scatter_results(decl: ContractDecl) -> list:
+    """The exact inverse property, on real tiny host arrays — no jax.
+
+    Build a routing table for a small scattered batch, gather each query's
+    padded-block coordinate via ``table.src_idx`` semantics (values[p, i]
+    = original request index), scatter back, and require identity.
+    """
+    from repro.core import partition, routing
+
+    findings = _check_invariant_names(decl)
+    rng = np.random.default_rng(0)
+    pts_all = rng.uniform(0.0, 1.0, (137, 2)).astype(np.float32)
+    grid = partition.make_grid(pts_all, gx=3, gy=3)
+    for n, pad in ((137, 8), (41, 4), (9, 1)):
+        pts = pts_all[:n]
+        table = routing.build_routing_table(grid, pts, pad_multiple=pad)
+        env = {"P": grid.num_partitions, "Q": table.q_max, "N": n}
+        # values[p, i] = the request index routed there (padding rows -1):
+        # gather-by-src_idx in its literal form
+        values = np.where(
+            table.qmask > 0, table.src_idx.astype(np.float32), -1.0
+        ).astype(np.float32)
+        for expr, shape in (
+            (decl.spec.get("args", {}).get("values"), values.shape),
+        ):
+            if expr:
+                err = unify(expr, shape, env)
+                if err:
+                    findings.append(_shape_finding(decl.target, f"n={n}", err))
+        out = routing.scatter_results(table, values)
+        err = unify(decl.spec.get("returns", "(N,)"), out.shape, env)
+        if err:
+            findings.append(_shape_finding(decl.target, f"n={n}", err))
+            continue
+        if "scatter-is-gather-inverse" in decl.spec.get("invariants", ()):
+            if not np.array_equal(out, np.arange(n, dtype=np.float32)):
+                findings.append(
+                    Finding(
+                        "contracts",
+                        "CONTRACT-INVERSE",
+                        f"target:{decl.target}",
+                        f"[n={n} pad={pad}] scatter(gather(x)) != x — "
+                        "src_idx no longer inverts the routing permutation",
+                    )
+                )
+    return findings
+
+
+def _mesh_fixture(grid_side: int, m: int):
+    """(grid, mesh, cov_fn, stacked abstract cache) for mesh harnesses.
+
+    Requires one device per partition (the CLI calls
+    ``ensure_host_devices`` before jax loads, like the serving drivers).
+    """
+    import jax
+
+    from repro.analysis import hlo
+    from repro.launch import serve_sharded as ss
+    from repro.gp.covariances import make_covariance
+
+    grid = hlo.probe_grid(grid_side)
+    if jax.device_count() < grid.num_partitions:
+        raise RuntimeError(
+            f"{grid.num_partitions} devices needed, have {jax.device_count()} "
+            "— run via `python -m repro.analysis` (it forces virtual host "
+            "devices before jax initializes)"
+        )
+    return grid, ss.mesh_for_grid(grid), make_covariance("rbf"), hlo.abstract_cache(
+        grid.num_partitions, m
+    )
+
+
+def harness_make_sharded_blend(
+    decl: ContractDecl, *, grid_side: int = 4, m: int = 8
+) -> list:
+    """eval_shape the built shard_map program on every backend."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch import serve_sharded as ss
+
+    findings = _check_invariant_names(decl)
+    grid, mesh, cov_fn, cache = _mesh_fixture(grid_side, m)
+    P, Q = grid.num_partitions, 64
+
+    def f32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    args = {
+        "hx": f32(P, 9, Q, 2),
+        "corner_slot": jax.ShapeDtypeStruct((P, Q, 4), jnp.int32),
+        "corner_w": f32(P, Q, 4),
+    }
+    for backend in ("ref", "pallas", "fused"):
+        blend_fn = ss.make_sharded_blend(
+            mesh, mesh.axis_names, grid, cov_fn, cache, backend=backend
+        )
+        try:
+            out = jax.eval_shape(
+                blend_fn, cache, args["hx"], args["corner_slot"], args["corner_w"]
+            )
+        except Exception as e:
+            findings.append(
+                Finding(
+                    "contracts",
+                    "CONTRACT-TRACE",
+                    f"target:{decl.target}",
+                    f"[{backend}] abstract trace failed: {e}",
+                )
+            )
+            continue
+        env = {"P": P, "Q": Q}
+        for name, expr in decl.spec.get("args", {}).items():
+            err = unify(expr, args[name].shape, env)
+            if err:
+                findings.append(_shape_finding(decl.target, backend, err))
+        for expr, leaf in zip(decl.spec.get("returns", ()), out, strict=True):
+            err = unify(expr, leaf.shape, env)
+            if err:
+                findings.append(_shape_finding(decl.target, backend, err))
+            if (
+                "outputs-f32" in decl.spec.get("invariants", ())
+                and leaf.dtype != jnp.float32
+            ):
+                findings.append(
+                    Finding(
+                        "contracts",
+                        "CONTRACT-DTYPE",
+                        f"target:{decl.target}",
+                        f"[{backend}] output dtype {leaf.dtype}, policy is f32",
+                    )
+                )
+    return findings
+
+
+def harness_make_request_stages(
+    decl: ContractDecl, *, grid_side: int = 4, m: int = 8
+) -> list:
+    """Route on real host data per policy kind; eval_shape the compiled
+    blend against the EXACT shapes route produced. This is the seam the
+    PR-5 ``pad_multiple`` bug lived in: the policy's q_max counters and
+    the table's compiled block shape must be the same number.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import routing
+    from repro.launch import serve_sharded as ss
+
+    findings = _check_invariant_names(decl)
+    grid, mesh, cov_fn, cache = _mesh_fixture(grid_side, m)
+    P = grid.num_partitions
+    blend_fn = ss.make_sharded_blend(mesh, mesh.axis_names, grid, cov_fn, cache)
+    rng = np.random.default_rng(0)
+    base = rng.uniform(0.0, 1.0, (500, 2)).astype(np.float32)
+    # a hot cell for the two-level lane: q_max must dip under the peak
+    hot = np.concatenate(
+        [base, rng.uniform(0.30, 0.42, (900, 2)).astype(np.float32)]
+    )
+    # a fixed q_max sized to the grid: peak owning-cell bucket, rounded up
+    ix, iy = routing.owning_cells(grid, base)
+    peak = int(np.bincount(iy * grid.gx + ix, minlength=P).max())
+    fixed = routing.ceil_to(peak, 8)
+    lanes = (
+        ("streaming", dict(policy=routing.StreamingQMax()), base),
+        ("streaming/pad5", dict(policy=routing.StreamingQMax(pad_multiple=5)), base),
+        ("two-level", dict(policy=routing.TwoLevelQMax()), hot),
+        ("fixed-q_max", dict(q_max=fixed), base),
+    )
+    invs = decl.spec.get("invariants", ())
+    for lane, kw, q in lanes:
+        route, _submit, _collect = ss.make_request_stages(
+            grid, blend_fn, cache, **kw
+        )
+        table, (hx, cs, cw) = route(q)
+        env = {"P": P, "Q": table.q_max, "D": 2, "N": len(q)}
+        spec = decl.spec.get("route", {})
+        for expr, shape in (
+            (spec.get("xq"), table.xq.shape),
+            (spec.get("stacked"), hx.shape),
+            (spec.get("corner_slot"), cs.shape),
+            (spec.get("corner_w"), cw.shape),
+        ):
+            if expr:
+                err = unify(expr, shape, env)
+                if err:
+                    findings.append(_shape_finding(decl.target, lane, err))
+        policy = kw.get("policy")
+        if "q_max-matches-policy" in invs and policy is not None:
+            if table.q_max != policy.q_max:
+                findings.append(
+                    Finding(
+                        "contracts",
+                        "CONTRACT-DESYNC",
+                        f"target:{decl.target}",
+                        f"[{lane}] table.q_max={table.q_max} != "
+                        f"policy.q_max={policy.q_max} — the table re-rounded "
+                        "the policy's block size, so the policy's "
+                        "compile/overflow counters describe shapes that are "
+                        "never compiled (the PR-5 pad_multiple bug)",
+                    )
+                )
+        if "q_max-aligned" in invs:
+            pad = (
+                policy.pad_multiple
+                if policy is not None
+                else 8  # the fixed-q_max lane's table default
+            )
+            if kw.get("q_max") is None and table.q_max % pad != 0:
+                findings.append(
+                    Finding(
+                        "contracts",
+                        "CONTRACT-DESYNC",
+                        f"target:{decl.target}",
+                        f"[{lane}] table.q_max={table.q_max} not aligned to "
+                        f"pad_multiple={pad}",
+                    )
+                )
+        # the seam: the compiled program must accept route's exact blocks
+        def f32(*shape):
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+        try:
+            out = jax.eval_shape(
+                blend_fn,
+                cache,
+                f32(*hx.shape),
+                jax.ShapeDtypeStruct(cs.shape, jnp.int32),
+                f32(*cw.shape),
+            )
+        except Exception as e:
+            findings.append(
+                Finding(
+                    "contracts",
+                    "CONTRACT-TRACE",
+                    f"target:{decl.target}",
+                    f"[{lane}] blend rejects route's block shapes: {e}",
+                )
+            )
+            continue
+        for leaf in out:
+            if tuple(leaf.shape) != (P, table.q_max):
+                findings.append(
+                    _shape_finding(
+                        decl.target,
+                        lane,
+                        f"blend output {tuple(leaf.shape)} != "
+                        f"(P={P}, q_max={table.q_max})",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+# target -> (harness, needs_mesh)
+_HARNESSES = {
+    "repro.core.posterior.predict_cached_slots": (
+        harness_predict_cached_slots,
+        False,
+    ),
+    "repro.core.routing.scatter_results": (harness_scatter_results, False),
+    "repro.launch.serve_sharded.make_sharded_blend": (
+        harness_make_sharded_blend,
+        True,
+    ),
+    "repro.launch.serve_sharded.make_request_stages": (
+        harness_make_request_stages,
+        True,
+    ),
+}
+
+
+def run(
+    *,
+    targets: tuple = None,
+    include_mesh: bool = True,
+    grid_side: int = 4,
+    m: int = 8,
+) -> tuple:
+    """Check every expected contract; returns (findings, report).
+
+    ``targets`` restricts to a subset; ``include_mesh=False`` skips the
+    harnesses that need one device per partition (tier-1 runs those via
+    the CLI subprocess instead). ``grid_side`` sizes the mesh fixture and
+    must not exceed the device count the caller arranged.
+    """
+    findings: list = []
+    t0 = time.time()
+    for target in EXPECTED_TARGETS:
+        importlib.import_module(target.rsplit(".", 1)[0])
+    checked = []
+    skipped = []
+    for target in EXPECTED_TARGETS:
+        if targets is not None and target not in targets:
+            continue
+        harness, needs_mesh = _HARNESSES[target]
+        if needs_mesh and not include_mesh:
+            skipped.append(target)
+            continue
+        decl = _REGISTRY.get(target)
+        if decl is None:
+            findings.append(
+                Finding(
+                    "contracts",
+                    "CONTRACT-MISSING",
+                    f"target:{target}",
+                    "expected @contract declaration is gone — restore it or "
+                    "update contracts.EXPECTED_TARGETS",
+                )
+            )
+            continue
+        checked.append(target)
+        if needs_mesh:
+            findings.extend(harness(decl, grid_side=grid_side, m=m))
+        else:
+            findings.extend(harness(decl))
+    report = {
+        "targets_checked": checked,
+        "targets_skipped": skipped,
+        "seconds": round(time.time() - t0, 3),
+    }
+    return findings, report

@@ -1,0 +1,307 @@
+"""Pass 1 — the HLO invariant linter.
+
+AOT-lowers every serving lane of ``invariants.LANES`` on ABSTRACT inputs
+(``jax.ShapeDtypeStruct`` — no training, no data, no mesh execution) and
+walks the StableHLO text for structural violations:
+
+  * collective budget: ``collective-permute`` count within the lane's
+    budget (the composed reverse halo is 4; budget 8);
+  * forbidden ops: no ``all-gather``/``all-reduce``/``reduce-scatter``/
+    ``all-to-all`` in any sharded program (the cache never moves), no
+    collectives at all in the replicated program;
+  * dtype policy: no f64 anywhere in a serving program;
+  * host transfers: no infeed/outfeed/send/recv/python callbacks inside a
+    compiled program (a host round-trip mid-program stalls the overlapped
+    pipeline for a full device window).
+
+This subsumes the hand-written HLO asserts that used to live in the slow
+SPMD lane of ``tests/test_serve_sharded.py`` — the budget is now checked
+on every push, against every lane, from one declarative manifest.
+
+Lowering needs one device per partition of the probe grid (virtual host
+devices on CPU): the CLI calls ``serve_sharded.ensure_host_devices`` before
+importing anything jax-backed, exactly like the serving entry points.
+"""
+from __future__ import annotations
+
+import re
+import time
+
+import numpy as np
+
+from repro.analysis import Finding
+from repro.analysis import invariants as inv
+
+# Abstract-input dimensions of the probe programs. Small on purpose: the
+# invariants are shape-independent (a 3x3 halo is 4 composed ppermutes at
+# any grid/q_max), so the cheapest lowering that exercises the real
+# program builders is the right one.
+DEFAULT_GRID_SIDE = 4
+DEFAULT_M = 8
+DEFAULT_Q_MAX = 64
+DEFAULT_N_QUERIES = 256
+
+
+def _count_op(text: str, op: str) -> int:
+    """Occurrences of a collective/transfer op in StableHLO or HLO text.
+
+    Ops appear as ``"stablehlo.collective_permute"(`` (MLIR generic form,
+    quoted), ``stablehlo.collective_permute(`` (MLIR pretty form) or
+    ``collective-permute(`` / ``collective-permute-start(`` (HLO);
+    counting call-anchored mentions of every spelling covers lowered and
+    compiled artifacts alike.
+    """
+    dashed, scored = op, op.replace("-", "_")
+    n = len(re.findall(re.escape(dashed) + r'(?:-start)?"?\(', text))
+    n += len(re.findall(re.escape(scored) + r'"?\(', text))
+    return n
+
+
+def count_collectives(text: str) -> dict:
+    """Per-op counts for every known collective mnemonic."""
+    return {op: _count_op(text, op) for op in inv.COLLECTIVE_OPS}
+
+
+_F64_RE = re.compile(r"xf64>|<f64>|f64\[")
+
+
+def has_f64(text: str) -> bool:
+    """True if any f64-typed value appears (``tensor<..xf64>`` / ``f64[``)."""
+    return _F64_RE.search(text) is not None
+
+
+def host_transfer_ops(text: str) -> list:
+    """Host-transfer mnemonics present in the text (call-anchored)."""
+    return [op for op in inv.HOST_TRANSFER_OPS if _count_op(text, op) > 0]
+
+
+def check_text(lane: "inv.LaneInvariant", text: str) -> tuple:
+    """Apply one lane's invariant to a lowered/compiled program text.
+
+    Returns (findings, counts) — ``counts`` is the per-collective op tally
+    recorded in ANALYSIS.json so CI can diff drift even while the budget
+    still holds.
+    """
+    where = f"lane:{lane.name}"
+    findings = []
+    counts = count_collectives(text)
+    ncp = counts["collective-permute"]
+    if ncp > lane.max_collective_permute:
+        findings.append(
+            Finding(
+                "hlo",
+                "HLO-COLLECTIVE-BUDGET",
+                where,
+                f"{ncp} collective-permutes exceed the lane budget of "
+                f"{lane.max_collective_permute} (composed reverse halo is 4 "
+                "— a per-slot exchange crept back in?)",
+            )
+        )
+    if ncp < lane.min_collective_permute:
+        findings.append(
+            Finding(
+                "hlo",
+                "HLO-COLLECTIVE-MISSING",
+                where,
+                f"only {ncp} collective-permutes, expected >= "
+                f"{lane.min_collective_permute} — the halo exchange is gone "
+                "from the program (or the linter's op pattern rotted)",
+            )
+        )
+    for op in lane.forbidden_ops:
+        if counts.get(op, 0):
+            findings.append(
+                Finding(
+                    "hlo",
+                    "HLO-FORBIDDEN-OP",
+                    where,
+                    f"forbidden op {op!r} appears {counts[op]}x — sharded "
+                    "serving must never re-aggregate the cache factors"
+                    if op in inv.GATHERING_COLLECTIVES
+                    else f"forbidden op {op!r} appears {counts[op]}x",
+                )
+            )
+    if lane.forbid_f64 and has_f64(text):
+        findings.append(
+            Finding(
+                "hlo",
+                "HLO-DTYPE-F64",
+                where,
+                "f64 values in the serving program — the serving dtype "
+                "policy is f32 (halo bytes double and the TPU fast path "
+                "is lost silently)",
+            )
+        )
+    if lane.forbid_host_transfer:
+        ops = host_transfer_ops(text)
+        if ops:
+            findings.append(
+                Finding(
+                    "hlo",
+                    "HLO-HOST-TRANSFER",
+                    where,
+                    f"host-transfer ops {ops} inside a compiled serving "
+                    "program — a host round-trip stalls the overlapped "
+                    "pipeline for a full device window",
+                )
+            )
+    return findings, counts
+
+
+# --------------------------------------------------------------------------
+# Probe-program construction (abstract inputs; lowering only, no execution)
+# --------------------------------------------------------------------------
+
+
+def probe_grid(side: int = DEFAULT_GRID_SIDE):
+    """A unit-square partition grid with ``side**2`` cells — the smallest
+    geometry that exercises the real program builders."""
+    from repro.core.partition import PartitionGrid
+
+    edges = np.linspace(0.0, 1.0, side + 1)
+    return PartitionGrid(gx=side, gy=side, x_edges=edges, y_edges=edges, wrap_x=False)
+
+
+def abstract_cache(num_partitions: int, m: int, d: int = 2):
+    """A P-stacked ``PosteriorCache`` of ``ShapeDtypeStruct`` leaves — the
+    same pytree STRUCTURE the serving path shards, with no arrays behind
+    it (``make_sharded_blend`` only reads the structure for its in_specs)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import posterior
+    from repro.gp.covariances import CovarianceParams
+
+    def f32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    return posterior.PosteriorCache(
+        z=f32(num_partitions, m, d),
+        w=f32(num_partitions, m, m),
+        u=f32(num_partitions, m, m),
+        c=f32(num_partitions, m),
+        cov=CovarianceParams(
+            log_lengthscale=f32(num_partitions, d), log_variance=f32(num_partitions)
+        ),
+        log_beta=f32(num_partitions),
+    )
+
+
+def lower_program(
+    program_key: tuple,
+    *,
+    grid_side: int = DEFAULT_GRID_SIDE,
+    m: int = DEFAULT_M,
+    q_max: int = DEFAULT_Q_MAX,
+    n_queries: int = DEFAULT_N_QUERIES,
+) -> str:
+    """Build + AOT-lower one device program; return its StableHLO text.
+
+    ``program_key`` is ``LaneInvariant.program_key``. Sharded programs are
+    the real ``make_sharded_blend`` shard_map over a one-partition-per-
+    device mesh; the replicated program is the real ``blend._blend_eval``
+    jit. Abstract inputs throughout — nothing executes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.gp.covariances import make_covariance
+
+    program, backend = program_key
+    grid = probe_grid(grid_side)
+    cov_fn = make_covariance("rbf")
+    cache = abstract_cache(grid.num_partitions, m)
+
+    def f32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    if program == "replicated-blend":
+        from repro.core import blend
+
+        lowered = blend._blend_eval.lower(
+            cache,
+            cov_fn,
+            f32(n_queries, 2),
+            jax.ShapeDtypeStruct((n_queries, 4), jnp.int64),
+            f32(n_queries, 4),
+        )
+    elif program == "sharded-blend":
+        from repro.launch import serve_sharded as ss
+
+        mesh = ss.mesh_for_grid(grid)
+        blend_fn = ss.make_sharded_blend(
+            mesh, mesh.axis_names, grid, cov_fn, cache, backend=backend
+        )
+        P = grid.num_partitions
+        lowered = blend_fn.lower(
+            cache,
+            f32(P, 9, q_max, 2),
+            jax.ShapeDtypeStruct((P, q_max, 4), jnp.int32),
+            f32(P, q_max, 4),
+        )
+    else:
+        raise ValueError(f"unknown program {program!r}")
+    return lowered.as_text()
+
+
+def run(
+    *,
+    grid_side: int = DEFAULT_GRID_SIDE,
+    m: int = DEFAULT_M,
+    q_max: int = DEFAULT_Q_MAX,
+    n_queries: int = DEFAULT_N_QUERIES,
+    lanes: tuple = None,
+) -> tuple:
+    """The full pass: lower every distinct program once, apply every lane.
+
+    Returns (findings, report) where ``report`` is the JSON-ready record
+    (per-lane program key, collective counts, violation count, timing).
+    """
+    from repro.api.config import ServeConfig
+
+    lanes = inv.LANES if lanes is None else lanes
+    findings: list = []
+    lane_records = []
+    texts: dict = {}
+    t0 = time.time()
+    for lane in lanes:
+        # manifest rot check: the lane's serve dict must still be a valid
+        # ServeConfig (field renames / illegal combinations fail the pass)
+        try:
+            ServeConfig.from_dict(lane.serve)
+        except (ValueError, TypeError) as e:
+            findings.append(
+                Finding(
+                    "hlo",
+                    "HLO-MANIFEST",
+                    f"lane:{lane.name}",
+                    f"lane serve dict no longer parses as a ServeConfig: {e}",
+                )
+            )
+            continue
+        key = lane.program_key
+        if key not in texts:
+            texts[key] = lower_program(
+                key, grid_side=grid_side, m=m, q_max=q_max, n_queries=n_queries
+            )
+        lane_findings, counts = check_text(lane, texts[key])
+        findings.extend(lane_findings)
+        lane_records.append(
+            {
+                "lane": lane.name,
+                "program": "/".join(key),
+                "serve_config": lane.serve,
+                "collectives": counts,
+                "max_collective_permute": lane.max_collective_permute,
+                "violations": len(lane_findings),
+            }
+        )
+    report = {
+        "lanes": lane_records,
+        "programs_lowered": sorted("/".join(k) for k in texts),
+        "grid_side": grid_side,
+        "m": m,
+        "q_max": q_max,
+        "seconds": round(time.time() - t0, 3),
+    }
+    return findings, report

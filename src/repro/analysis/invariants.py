@@ -1,0 +1,164 @@
+"""The declarative per-lane invariant manifest the HLO pass enforces.
+
+Every serving lane (a valid :class:`repro.api.ServeConfig` point) carries a
+:class:`LaneInvariant`: which device program it compiles, how many
+nearest-neighbor collectives that program may contain, which ops are
+forbidden outright, and the dtype/host-transfer policy. The manifest is the
+checkable form of the architecture prose in docs/architecture.md:
+
+  * sharded predict is HALO-SHAPED — the composed reverse halo is 4
+    ppermutes (row exchange + column exchange of the slot-flipped results);
+    the budget of 8 leaves headroom for a second composed exchange but is
+    far below the 36 per-slot hops the PR-2 program paid;
+  * the cache NEVER moves — no all-gather / all-reduce / reduce-scatter /
+    all-to-all anywhere in a serving program (the decentralized-serving
+    claim, arXiv 1402.1472-style: ship low-rank summaries once, never
+    re-aggregate);
+  * replicated predict is mesh-free — ZERO collectives of any kind;
+  * serving math is f32 — an f64 leak doubles halo bytes and falls off the
+    TPU fast path silently;
+  * no host transfers inside a compiled serving program — a callback or
+    infeed would stall the overlapped pipeline for a full device window
+    (the ``device_put``-inside-``route`` bug class, at the HLO level).
+
+Lanes that share a device program (pipeline/router only change HOST-side
+scheduling) point at the same ``program`` key; the HLO pass lowers each
+distinct program once and applies every lane's invariant to its text, so a
+future divergence between two lanes' programs is caught the moment someone
+introduces one.
+
+Stdlib-only: the manifest must be importable (and testable) without jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# Collective mnemonics as they appear in StableHLO / HLO text. The dashed
+# and underscored spellings are both matched by the HLO pass.
+COLLECTIVE_OPS = (
+    "collective-permute",
+    "all-gather",
+    "all-reduce",
+    "all-to-all",
+    "reduce-scatter",
+)
+
+# Ops that move data between host and device inside a compiled program.
+HOST_TRANSFER_OPS = (
+    "infeed",
+    "outfeed",
+    "send",
+    "recv",
+    "xla_python_cpu_callback",
+    "xla_python_gpu_callback",
+    "xla_ffi_python",
+    "host_callback",
+)
+
+# The factors-never-move claim: nothing may re-aggregate sharded state.
+GATHERING_COLLECTIVES = ("all-gather", "all-reduce", "all-to-all", "reduce-scatter")
+
+# Composed reverse halo = 4 ppermutes; budget 8 leaves room for one more
+# composed exchange (e.g. a future low-rank global term) but stays an
+# order below the 36 per-slot hops the pre-composition program paid.
+PPERMUTE_BUDGET = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class LaneInvariant:
+    """What one serving lane's compiled program is allowed to contain.
+
+    Fields:
+      name: stable lane id, e.g. "sharded/pipelined/two-level/fused".
+      serve: the ServeConfig dict of the lane (validated against
+        ``repro.api.ServeConfig.from_dict`` by the HLO pass, so manifest
+        rot — a field rename, an illegal combination — fails the pass).
+      program: device-program key the HLO pass lowers —
+        "replicated-blend" | "sharded-blend".
+      backend: kernel lane the program is built with ("ref"|"pallas"|
+        "fused"); with ``program="replicated-blend"`` must be "ref".
+      max_collective_permute: inclusive ppermute budget.
+      min_collective_permute: floor — a sharded program with FEWER is just
+        as wrong (the halo vanished, or the linter stopped seeing it; the
+        floor is what catches a rotted op-matching pattern).
+      forbidden_ops: op mnemonics that must not appear at all.
+      forbid_f64 / forbid_host_transfer: dtype and host-transfer policy.
+    """
+
+    name: str
+    serve: dict
+    program: str
+    backend: str
+    max_collective_permute: int
+    forbidden_ops: tuple
+    min_collective_permute: int = 0
+    forbid_f64: bool = True
+    forbid_host_transfer: bool = True
+
+    def __post_init__(self) -> None:
+        if self.program not in ("replicated-blend", "sharded-blend"):
+            raise ValueError(f"unknown program {self.program!r} for lane {self.name!r}")
+        if self.backend not in ("ref", "pallas", "fused"):
+            raise ValueError(f"unknown backend {self.backend!r} for lane {self.name!r}")
+        if self.program == "replicated-blend" and self.backend != "ref":
+            raise ValueError(f"replicated lanes have no kernel lane (lane {self.name!r})")
+        if self.max_collective_permute < 0:
+            raise ValueError(f"negative ppermute budget for lane {self.name!r}")
+        if not 0 <= self.min_collective_permute <= self.max_collective_permute:
+            raise ValueError(f"bad ppermute floor for lane {self.name!r}")
+        unknown = set(self.forbidden_ops) - set(COLLECTIVE_OPS)
+        if unknown:
+            raise ValueError(f"unknown forbidden ops {sorted(unknown)} for lane {self.name!r}")
+
+    @property
+    def program_key(self) -> tuple:
+        """(program, backend): lanes sharing it share one lowered text."""
+        return (self.program, self.backend)
+
+
+def _sharded_lanes() -> tuple:
+    lanes = []
+    for pipeline in ("serial", "pipelined"):
+        for router in ("single", "two-level"):
+            for backend in ("ref", "pallas", "fused"):
+                lanes.append(
+                    LaneInvariant(
+                        name=f"sharded/{pipeline}/{router}/{backend}",
+                        serve={
+                            "mode": "sharded",
+                            "pipeline": pipeline,
+                            "router": router,
+                            "backend": backend,
+                        },
+                        program="sharded-blend",
+                        backend=backend,
+                        max_collective_permute=PPERMUTE_BUDGET,
+                        min_collective_permute=4,
+                        forbidden_ops=GATHERING_COLLECTIVES,
+                    )
+                )
+    # the fixed-q_max whole-stream-prepass lane (sharded single-router)
+    lanes.append(
+        LaneInvariant(
+            name="sharded/serial/single/ref/fixed-q_max",
+            serve={"mode": "sharded", "backend": "ref", "q_max": 64},
+            program="sharded-blend",
+            backend="ref",
+            max_collective_permute=PPERMUTE_BUDGET,
+            min_collective_permute=4,
+            forbidden_ops=GATHERING_COLLECTIVES,
+        )
+    )
+    return tuple(lanes)
+
+
+LANES: tuple = (
+    LaneInvariant(
+        name="replicated/serial/single/ref",
+        serve={"mode": "replicated", "backend": "ref"},
+        program="replicated-blend",
+        backend="ref",
+        max_collective_permute=0,
+        forbidden_ops=COLLECTIVE_OPS,
+    ),
+) + _sharded_lanes()

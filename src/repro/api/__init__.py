@@ -26,7 +26,7 @@ The CLI entry points (``launch/serve.py --gp``, ``launch/serve_sharded``,
 ``benchmarks/bench_serve``, ``examples/serve_demo.py``) are thin shims
 over this package. See docs/api.md.
 """
-from repro.api.config import FitConfig, ServeConfig
+from repro.api.config import FitConfig, ServeConfig, load_session
 from repro.api.fitted import FittedPSVGP, fit, peek_fit_config
 from repro.api.server import Server
 
@@ -36,5 +36,6 @@ __all__ = [
     "FittedPSVGP",
     "Server",
     "fit",
+    "load_session",
     "peek_fit_config",
 ]

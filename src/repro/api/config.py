@@ -21,7 +21,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import warnings
-from typing import Optional
 
 _COMMS = ("gather", "ppermute")
 _COVARIANCES = ("rbf", "matern32", "matern52")
@@ -155,7 +154,7 @@ class ServeConfig:
     backend: str = "auto"
     headroom: float = 1.25
     pad_multiple: int = 8
-    q_max: Optional[int] = None
+    q_max: int | None = None
 
     def __post_init__(self) -> None:
         _check(self.mode in _MODES, f"mode must be one of {_MODES}, got {self.mode!r}")
@@ -258,3 +257,24 @@ class ServeConfig:
     @classmethod
     def from_json(cls, s: str) -> "ServeConfig":
         return cls.from_dict(json.loads(s))
+
+
+def load_session(path: str):
+    """Read a session file: ``{"fit": {...}, "serve": {...}}``, both
+    sections optional, no other keys. Returns (fit, serve) with ``None``
+    for an absent section.
+
+    This is the ``--config session.json`` lane of the serving CLIs — the
+    same JSON a saved artifact manifest or a benchmark row carries, so a
+    recorded session replays without reconstructing flag spellings.
+    Stdlib-only on purpose: the sharded CLI must read the fit grid (to
+    force one virtual device per partition) BEFORE jax initializes.
+    """
+    with open(path, encoding="utf-8") as f:
+        d = json.load(f)
+    _check(isinstance(d, dict), f"session file {path} must hold a JSON object")
+    unknown = set(d) - {"fit", "serve"}
+    _check(not unknown, f"unknown session sections {sorted(unknown)}; use 'fit'/'serve'")
+    fit = FitConfig.from_dict(d["fit"]) if "fit" in d else None
+    serve = ServeConfig.from_dict(d["serve"]) if "serve" in d else None
+    return fit, serve

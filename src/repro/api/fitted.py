@@ -31,7 +31,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,7 @@ def _zeros(*shape) -> jnp.ndarray:
     return jnp.zeros(shape, jnp.float32)
 
 
-def _artifact_templates(cfg: FitConfig) -> Tuple[svgp.SVGPParams, posterior.PosteriorCache]:
+def _artifact_templates(cfg: FitConfig) -> tuple[svgp.SVGPParams, posterior.PosteriorCache]:
     """Shape/dtype templates for the checkpointed pytrees — derived from the
     FitConfig alone, which is why the manifest makes the artifact
     self-describing (``checkpoint.load_pytree`` restores INTO a template)."""
@@ -148,7 +148,7 @@ class FittedPSVGP:
             jax.block_until_ready(self._cache)
         return self._cache
 
-    def predict(self, points) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def predict(self, points) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Replicated blended prediction at (N, 2) points -> (mean, var),
         served from the cached factors (``blend.predict_blended``)."""
         return predict_blended(

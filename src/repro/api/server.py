@@ -28,7 +28,7 @@ artifacts) first thing.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -56,12 +56,12 @@ class Server:
         self.backend = self.config.resolve_backend()
         self.policy = None
         self.mesh = None
-        self.cache_bytes: Optional[Tuple[int, int]] = None
+        self.cache_bytes: tuple[int, int] | None = None
         self._stats = {"requests": 0, "waste_rows": 0, "spilled": 0}
         if self.config.mode == "sharded":
             self._init_sharded()
         else:
-            fitted.cache  # factorize up front, off the request path
+            _ = fitted.cache  # factorize up front, off the request path
 
     # -- construction ------------------------------------------------------
 
@@ -115,7 +115,7 @@ class Server:
 
     # -- serving -----------------------------------------------------------
 
-    def submit(self, queries) -> Tuple[np.ndarray, np.ndarray]:
+    def submit(self, queries) -> tuple[np.ndarray, np.ndarray]:
         """Answer one query batch (N, 2), blocking: (mean (N,), var (N,))."""
         if self.config.mode == "sharded":
             return self._collect_stage(self._submit_stage(self._route_stage(queries)))

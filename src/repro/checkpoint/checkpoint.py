@@ -18,7 +18,7 @@ a few KB per partition instead of the raw field).
 from __future__ import annotations
 
 import os
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import msgpack
@@ -85,7 +85,7 @@ def save_train_state(ckpt_dir: str, step: int, state: Any) -> str:
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[str]:
+def latest_step(ckpt_dir: str) -> str | None:
     p = os.path.join(ckpt_dir, "latest")
     if not os.path.exists(p):
         return None
@@ -93,6 +93,6 @@ def latest_step(ckpt_dir: str) -> Optional[str]:
         return os.path.join(ckpt_dir, f.read().strip())
 
 
-def load_train_state(ckpt_dir: str, template: Any) -> Optional[Any]:
+def load_train_state(ckpt_dir: str, template: Any) -> Any | None:
     path = latest_step(ckpt_dir)
     return None if path is None else load_pytree(path, template)

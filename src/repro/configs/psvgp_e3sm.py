@@ -9,7 +9,6 @@ fig. 4 also reports m = 10, 20 — see benchmarks/bench_delta.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 from repro.core.psvgp import PSVGPConfig
 from repro.core.svgp import SVGPConfig
@@ -18,7 +17,7 @@ from repro.core.svgp import SVGPConfig
 @dataclasses.dataclass(frozen=True)
 class E3SMExperiment:
     n_obs: int = 48602
-    grid: Tuple[int, int] = (20, 20)  # the paper's N_part = 400
+    grid: tuple[int, int] = (20, 20)  # the paper's N_part = 400
     num_inducing: int = 5
     delta: float = 0.125  # the paper's best boundary-smoothness setting
     batch_size: int = 32
@@ -27,6 +26,16 @@ class E3SMExperiment:
     iters: int = 2500
     probes_per_edge: int = 23  # ~the paper's 17,556 boundary locations
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_obs <= 0 or self.num_inducing <= 0:
+            raise ValueError("n_obs and num_inducing must be positive")
+        if len(self.grid) != 2 or min(self.grid) < 1:
+            raise ValueError(f"grid must be two positive cell counts, got {self.grid}")
+        if self.delta < 0 or self.learning_rate <= 0:
+            raise ValueError("delta >= 0 and learning_rate > 0 required")
+        if min(self.batch_size, self.probes_per_edge) <= 0 or self.iters < 0:
+            raise ValueError("batch_size/probes_per_edge > 0 and iters >= 0 required")
 
     def psvgp(self, comm: str = "gather", use_pallas: bool = False) -> PSVGPConfig:
         return PSVGPConfig(

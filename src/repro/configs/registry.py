@@ -9,11 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import List
 
 from repro.models.config import ModelConfig
 
-ARCH_IDS: List[str] = [
+ARCH_IDS: list[str] = [
     "deepseek_moe_16b",
     "internvl2_76b",
     "qwen2_0_5b",

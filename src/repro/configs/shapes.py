@@ -6,7 +6,7 @@ lower decode_step (ONE new token against a seq_len cache).
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +20,7 @@ class InputShape(NamedTuple):
     kind: str  # train | prefill | decode
 
 
-INPUT_SHAPES: Dict[str, InputShape] = {
+INPUT_SHAPES: dict[str, InputShape] = {
     "train_4k": InputShape(4_096, 256, "train"),
     "prefill_32k": InputShape(32_768, 32, "prefill"),
     "decode_32k": InputShape(32_768, 128, "decode"),
@@ -28,7 +28,7 @@ INPUT_SHAPES: Dict[str, InputShape] = {
 }
 
 
-def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict[str, jax.ShapeDtypeStruct]:
     """Data-side inputs as ShapeDtypeStructs (no allocation).
 
     For decode kinds this is the single-token input; the cache structs are

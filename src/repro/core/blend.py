@@ -28,7 +28,7 @@ benchmarks/bench_predict.py, launch/serve.py --gp).
 from __future__ import annotations
 
 import functools
-from typing import Callable, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ from repro.core.partition import PartitionGrid
 from repro.core.psvgp import PSVGPState, PSVGPStatic, posterior_cache
 
 
-def corner_ids_weights(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def corner_ids_weights(grid: PartitionGrid, pts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """The 4 surrounding partition models of each point + bilinear weights.
 
     This is the geometric core of both the blended predictor below and the
@@ -99,7 +99,7 @@ def _blend_eval(
     xq: jnp.ndarray,
     ids: jnp.ndarray,
     w: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """All N points against all 4 corners — cached factors only, no
     factorization anywhere inside."""
 
@@ -112,7 +112,7 @@ def _blend_eval(
 
         return jax.vmap(one)(cache_c, xq)
 
-    means, varis = zip(*(eval_corner(c) for c in range(4)))
+    means, varis = zip(*(eval_corner(c) for c in range(4)), strict=True)
     means = jnp.stack(means, axis=1)  # (N, 4)
     varis = jnp.stack(varis, axis=1)
     mean = jnp.sum(w * means, axis=1)
@@ -127,7 +127,7 @@ def predict_blended(
     grid: PartitionGrid,
     points: jnp.ndarray,
     cache: posterior.PosteriorCache | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Continuous stitched prediction at arbitrary points.
 
     Args:

@@ -11,7 +11,7 @@ device arrays ready for the training loop.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ class PartitionGrid(NamedTuple):
     def num_partitions(self) -> int:
         return self.gx * self.gy
 
-    def cell_of(self, i: int) -> Tuple[int, int]:
+    def cell_of(self, i: int) -> tuple[int, int]:
         """Partition index -> (ix, iy), row-major with x fastest."""
         return i % self.gx, i // self.gx
 
@@ -61,7 +61,7 @@ def make_grid(
     gx: int,
     gy: int,
     wrap_x: bool = False,
-    bounds: Tuple[float, float, float, float] | None = None,
+    bounds: tuple[float, float, float, float] | None = None,
 ) -> PartitionGrid:
     """Build a regular gx x gy grid covering the data (or explicit bounds).
 
@@ -89,7 +89,7 @@ def make_grid(
     )
 
 
-def cell_indices(grid: PartitionGrid, x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def cell_indices(grid: PartitionGrid, x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """(ix, iy) owning grid cell of each point in x (N, 2), int64.
 
     The ONE binning rule shared by training-time partitioning

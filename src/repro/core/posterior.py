@@ -34,12 +34,14 @@ algebra, used by both the training and the serving path.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Tuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
 
+from repro.analysis.contracts import contract
 from repro.gp.covariances import CovarianceParams, kdiag
 
 
@@ -73,7 +75,7 @@ def kmm_chol(params: Any, cov_fn: Callable, jitter: float) -> jnp.ndarray:
 
 def projection(
     params: Any, cov_fn: Callable, x: jnp.ndarray, jitter: float, use_pallas: bool
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Shared O(B m^2) training hot path (the ELBO's eq. 3 projection).
 
     Returns (lk, kdiag_res, lmm) where
@@ -133,7 +135,7 @@ def predict_cached(
     *,
     include_noise: bool = False,
     use_pallas: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Predictive mean/variance at xstar (Q, d) from cached factors.
 
     fmean = K(x*, Z) c
@@ -194,7 +196,7 @@ def predict_cached_stacked(
     *,
     include_noise: bool = False,
     use_pallas: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Each stacked model predicts at its own rows of xstar.
 
     Args:
@@ -227,6 +229,11 @@ def resolve_slot_backend(use_pallas: bool, backend: str | None) -> str:
     return backend
 
 
+@contract(
+    args={"xslots": "(S, Q, D)"},
+    returns=("(S, Q)", "(S, Q)"),
+    invariants=("outputs-f32",),
+)
 def predict_cached_slots(
     cache: PosteriorCache,
     cov_fn: Callable,
@@ -235,7 +242,7 @@ def predict_cached_slots(
     include_noise: bool = False,
     use_pallas: bool = False,
     backend: str | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """ONE model evaluated on S stacked query blocks: xslots (S, Q, d).
 
     This is the device-side serving hot path: the sharded blend evaluates

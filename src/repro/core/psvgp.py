@@ -30,7 +30,8 @@ report) and ``benchmarks.bench_predict`` (cached-vs-seed speedup gate).
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple, Tuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -130,7 +131,7 @@ def train_step_gather(
     dist: SlotDistribution,
     cfg: PSVGPConfig,
     cov_fn: Callable,
-) -> Tuple[PSVGPState, jnp.ndarray]:
+) -> tuple[PSVGPState, jnp.ndarray]:
     """One SGD iteration of the paper's algorithm for all partitions at once.
 
     Communication pattern: partition j pulls a B-point mini-batch from its
@@ -168,7 +169,7 @@ def train_step_ppermute(
     p_dir: jnp.ndarray,
     cfg: PSVGPConfig,
     cov_fn: Callable,
-) -> Tuple[PSVGPState, jnp.ndarray]:
+) -> tuple[PSVGPState, jnp.ndarray]:
     """Single-host simulation of the TPU-native step (identical math).
 
     One global direction d ~ p_dir; every partition ships its OWN mini-batch
@@ -307,7 +308,7 @@ def predict_local(
     state: PSVGPState,
     xstar: jnp.ndarray,
     cache: posterior.PosteriorCache | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Each partition's model predicts at its OWN rows of xstar (P, Q, d)."""
     if cache is None:
         cache = posterior_cache(static, state)
@@ -320,7 +321,7 @@ def predict_at_partitions(
     part_ids: jnp.ndarray,
     points: jnp.ndarray,
     cache: posterior.PosteriorCache | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Predict ``points`` (E, Q, d) with the models of ``part_ids`` (E,)."""
     if cache is None:
         cache = posterior_cache(static, state)

@@ -20,7 +20,7 @@ streams) — tested in tests/test_psvgp_spmd.py.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Sequence, Tuple
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ from repro.optim import adam_update
 from repro.runtime import compat
 
 
-def _row_axes(axes: Sequence[str]) -> Tuple[str, ...]:
+def _row_axes(axes: Sequence[str]) -> tuple[str, ...]:
     """Mesh axes carrying the grid's y coordinate (all but the last)."""
     return tuple(axes[:-1])
 

@@ -45,12 +45,14 @@ tests and as a fallback when no mesh is available.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Tuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.contracts import contract
 from repro.core import posterior
 from repro.core.blend import corner_ids_weights
 from repro.core.partition import PartitionGrid, cell_indices
@@ -58,7 +60,7 @@ from repro.core.partition import PartitionGrid, cell_indices
 # 3x3 halo slot layout, row-major over (dy, dx) in {-1, 0, +1}^2:
 # slot k <-> offset (dx, dy) = (k % 3 - 1, k // 3 - 1); slot 4 is self.
 # The reverse slot (offset negated) is 8 - k.
-OFFSETS: Tuple[Tuple[int, int], ...] = tuple(
+OFFSETS: tuple[tuple[int, int], ...] = tuple(
     (dx, dy) for dy in (-1, 0, 1) for dx in (-1, 0, 1)
 )
 SELF_SLOT = 4
@@ -135,7 +137,7 @@ class RoutingTable(NamedTuple):
         return self.num_partitions * self.q_max - self.num_queries
 
 
-def owning_cells(grid: PartitionGrid, pts: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+def owning_cells(grid: PartitionGrid, pts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """(ix, iy) grid cell owning each point — delegates to the SAME binning
     ``partition.partition_data`` uses (``partition.cell_indices``), so a
     routed query always lands on the device that trained on its region."""
@@ -278,8 +280,8 @@ def build_routing_table(
     *,
     q_max: int | None = None,
     pad_multiple: int = 8,
-    cells: Tuple[np.ndarray, np.ndarray] | None = None,
-    corners: Tuple[np.ndarray, np.ndarray] | None = None,
+    cells: tuple[np.ndarray, np.ndarray] | None = None,
+    corners: tuple[np.ndarray, np.ndarray] | None = None,
     spill: bool = False,
     hosts: np.ndarray | None = None,
 ) -> RoutingTable:
@@ -501,7 +503,7 @@ class TwoLevelQMax(StreamingQMax):
 
     def fit_spill(
         self, grid: PartitionGrid, own: np.ndarray, ids: np.ndarray
-    ) -> Tuple[int, np.ndarray]:
+    ) -> tuple[int, np.ndarray]:
         """Observe a batch (flat owning cells + corner ids); return the
         (q_max, hosts) to route it with. ``hosts`` is the exact
         ``spill_assign`` result at the returned q_max — pass BOTH into
@@ -574,6 +576,11 @@ def make_halo_stacker(grid: PartitionGrid) -> Callable[[np.ndarray], np.ndarray]
     return stack
 
 
+@contract(
+    args={"values": "(P, Q)"},
+    returns="(N,)",
+    invariants=("scatter-is-gather-inverse",),
+)
 def scatter_results(table: RoutingTable, values: np.ndarray) -> np.ndarray:
     """Reassemble per-partition padded results into request order.
 
@@ -597,7 +604,7 @@ def blend_slots(
     res_var: jnp.ndarray,
     corner_slot: jnp.ndarray,
     corner_w: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Resolve per-slot evaluations into the 4-corner bilinear blend.
 
     Args:
@@ -626,7 +633,7 @@ def predict_routed(
     table: RoutingTable,
     *,
     use_pallas: bool = False,
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """Single-host reference of the sharded serving program (same math).
 
     For every partition p and halo slot k, evaluates the model at

@@ -22,7 +22,7 @@ trainer can vmap; slot probabilities use the (P, 5) neighbor table from
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +62,7 @@ def sample_slots(key: jax.Array, dist: SlotDistribution) -> jnp.ndarray:
     return jnp.take_along_axis(dist.neighbor_tbl, slot[:, None], axis=1)[:, 0], slot
 
 
-def sample_row_indices(key: jax.Array, mask_row: jnp.ndarray, batch: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def sample_row_indices(key: jax.Array, mask_row: jnp.ndarray, batch: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Single-row version: (n_max,) mask -> (B,) indices + validity.
 
     This is the per-partition primitive; the SPMD step calls it directly with
@@ -77,7 +77,7 @@ def sample_row_indices(key: jax.Array, mask_row: jnp.ndarray, batch: int) -> Tup
 
 def sample_minibatch_indices(
     key: jax.Array, mask_rows: jnp.ndarray, batch: int
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Uniform WITHOUT-replacement indices from masked rows.
 
     mask_rows: (P, n_max) validity of each stored point in the SOURCE row.
@@ -98,7 +98,7 @@ def gather_minibatch(
     kprime: jnp.ndarray,
     idx: jnp.ndarray,
     bmask_from_source: jnp.ndarray | None = None,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Materialize the (P, B, ...) mini-batches from source partitions kprime.
 
     This is the paper-faithful "gather" communication mode: under SPMD the

@@ -19,7 +19,8 @@ the paper / Hensman 2013 exactly.
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple, Tuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -115,7 +116,7 @@ def q_f(
     jitter: float = 1e-5,
     whitened: bool = False,
     use_pallas: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Marginal q(f_i) = N(fmean_i, fvar_i) at inputs x — the SVGP predictive.
 
     fmean = k_i^T Kmm^{-1} m_star              (unwhitened)
@@ -208,7 +209,7 @@ def predict(
     jitter: float = 1e-5,
     whitened: bool = False,
     include_noise: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Predictive mean/variance at new locations (latent f by default).
 
     One-shot path: factorizes Kmm, predicts, discards the factors. Callers

@@ -8,7 +8,7 @@ something learnable so example runs show a decreasing curve.
 """
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from collections.abc import Iterator
 
 import numpy as np
 
@@ -20,7 +20,7 @@ def synthetic_token_batches(
     seed: int = 0,
     num_batches: int | None = None,
     start_row: int = 0,
-) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
     """Yield (tokens, targets) of shape (batch, seq_len) int32.
 
     Markov chain: next = (a * cur + noise) mod V with a small noise alphabet,

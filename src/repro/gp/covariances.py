@@ -9,7 +9,8 @@ Shapes: X is (n, d), Z is (m, d). Output K(X, Z) is (n, m).
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from collections.abc import Callable
+from typing import NamedTuple
 
 import jax.numpy as jnp
 

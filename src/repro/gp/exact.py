@@ -6,7 +6,7 @@ GP predictions as inducing points -> data points.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from collections.abc import Callable
 
 import jax.numpy as jnp
 import jax.scipy.linalg as jsl
@@ -47,7 +47,7 @@ def exact_gp_predict(
     y: jnp.ndarray,
     xstar: jnp.ndarray,
     jitter: float = 1e-6,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Posterior mean and variance at xstar — the paper's eq. (2)."""
     chol = _chol(params, cov_fn, x, log_beta, jitter)
     ks = cov_fn(params, x, xstar)  # (n, n*)

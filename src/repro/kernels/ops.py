@@ -9,7 +9,6 @@ container validates them; on a real TPU backend they compile to Mosaic.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +80,7 @@ def svgp_projection(
     log_lengthscale: jnp.ndarray,
     log_variance: jnp.ndarray,
     lmm: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused ELBO projection. lmm: (m, m) lower Cholesky of Kmm.
 
     Returns (knm (B,m), lk_t (B,m), q_diag (B,)) with TRUE shapes.
@@ -138,7 +137,7 @@ def posterior_predict(
     *,
     interpret: bool | None = None,
     cov_fn=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused cached-posterior prediction, padding-safe (serving hot path).
 
     x (Q, d) queries; z (m, d); w/u (m, m) cached factors; c (m,) cached
@@ -179,7 +178,7 @@ def posterior_predict_slots(
     *,
     interpret: bool | None = None,
     cov_fn=None,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Slot-stacked fused prediction: hx (S, Q, d) -> (mean, fvar) (S, Q).
 
     The sharded serving hot path: ONE model evaluated on S stacked query

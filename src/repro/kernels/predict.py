@@ -39,7 +39,6 @@ tests/test_posterior.py).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +89,7 @@ def posterior_predict_pallas(
     *,
     block_q: int = 128,
     interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x (Q, d), z (m, d), w/u (m, m), c (m,) -> (mean (Q,), fvar (Q,)).
 
     Caller contract: Q % block_q == 0, m % 128 == 0, and w/u/c are
@@ -169,7 +168,7 @@ def posterior_predict_slots_pallas(
     *,
     block_q: int = 128,
     interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """hx (S, Q, d) slot-stacked queries -> (mean (S, Q), fvar (S, Q)).
 
     Grid = (S, Q // block_q): one launch covers every halo slot. The slot

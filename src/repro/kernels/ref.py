@@ -7,7 +7,6 @@ tests against the gp/ implementations.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ def svgp_projection(
     log_lengthscale: jnp.ndarray,
     log_variance: jnp.ndarray,
     w: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Fused SVGP projection (the O(B m^2) ELBO hot path).
 
     w: (m, m) = Lmm^{-1} (dense lower-triangular inverse of chol(Kmm)).
@@ -55,7 +54,7 @@ def posterior_predict(
     w: jnp.ndarray,
     u: jnp.ndarray,
     c: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Fused cached-posterior prediction (the serving hot path).
 
     w: (m, m) = Lmm^{-1};  u: (m, m) = Sl^T A;  c: (m,) projected mean
@@ -79,7 +78,7 @@ def posterior_predict_slots(
     w: jnp.ndarray,
     u: jnp.ndarray,
     c: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Slot-stacked ``posterior_predict``: hx (S, Q, d) -> (S, Q) pairs.
 
     One model, S stacked query blocks (the serving program's 9 halo
@@ -99,7 +98,7 @@ def posterior_predict_slots_masked(
     w: jnp.ndarray,
     u: jnp.ndarray,
     c: jnp.ndarray,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Masked slot-stacked oracle — the TWO-LEVEL routing contract.
 
     A two-level block mixes owner rows, spill rows (real queries hosted

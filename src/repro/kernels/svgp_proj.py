@@ -16,7 +16,6 @@ The triangular solve producing W and the (m x m) Cholesky stay in XLA: one
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,7 +53,7 @@ def svgp_projection_pallas(
     *,
     block_b: int = 128,
     interpret: bool = False,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """x (B, d), z (m, d), w (m, m) -> (knm (B,m), lk_t (B,m), q_diag (B,)).
 
     Caller contract: B % block_b == 0, m % 128 == 0, and w is ZERO-PADDED

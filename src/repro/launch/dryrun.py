@@ -84,7 +84,7 @@ def _lower_combo(cfg, shape_name: str, mesh, fsdp: bool = False, microbatches: i
             names = [k for k in ("tokens", "frames", "patches") if k in specs]
             in_sh = [pspecs.params] + [bspec for _ in names]
             jitted = jax.jit(
-                lambda params, *args: step(params, **dict(zip(names, args))),
+                lambda params, *args: step(params, **dict(zip(names, args, strict=True))),
                 in_shardings=compat.named_shardings(mesh, tuple(in_sh)),
             )
             lowered = jitted.lower(state_shapes.params, *[specs[k] for k in names])

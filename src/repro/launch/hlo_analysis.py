@@ -17,7 +17,7 @@ bytes of every collective op (payload ~ bytes leaving/entering a device).
 from __future__ import annotations
 
 import re
-from typing import Dict, NamedTuple
+from typing import NamedTuple
 
 # TPU v5e hardware constants (per chip), from the assignment.
 PEAK_FLOPS = 197e12  # bf16 FLOP/s
@@ -48,9 +48,9 @@ def _shape_bytes(spec: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> Dict[str, int]:
+def collective_bytes(hlo_text: str) -> dict[str, int]:
     """Per-collective-kind payload bytes (result shapes), per device."""
-    out: Dict[str, int] = {}
+    out: dict[str, int] = {}
     for m in _COLL_RE.finditer(hlo_text):
         result_spec, kind = m.group(1), m.group(2)
         out[kind] = out.get(kind, 0) + _shape_bytes(result_spec)
@@ -61,7 +61,7 @@ class RooflineTerms(NamedTuple):
     flops_per_device: float
     bytes_per_device: float
     collective_bytes_per_device: float
-    collective_breakdown: Dict[str, int]
+    collective_breakdown: dict[str, int]
     compute_s: float
     memory_s: float
     collective_s: float

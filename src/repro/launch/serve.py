@@ -45,12 +45,19 @@ def serve_gp(args) -> None:
     over ``repro.api``: fit (or load) the artifact, then serve the request
     stream through a replicated ``api.Server``."""
     from repro import api
-    from repro.launch.serve_sharded import load_or_train, query_batches
+    from repro.launch.serve_sharded import (
+        load_or_train,
+        query_batches,
+        session_configs,
+    )
 
-    ds, fitted = load_or_train(args)
+    fit_cfg, serve_cfg = session_configs(args, expect_mode="replicated")
+    ds, fitted = load_or_train(args, fit_cfg=fit_cfg)
 
     t0 = time.time()
-    server = api.Server(fitted, api.ServeConfig(mode="replicated"))
+    if serve_cfg is None:
+        serve_cfg = api.ServeConfig(mode="replicated")
+    server = api.Server(fitted, serve_cfg)
     if ds is not None:
         print(f"posterior cache built in {(time.time()-t0)*1e3:.1f} ms "
               f"(one O(P m^3) factorization, reused by every request)")

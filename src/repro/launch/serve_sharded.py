@@ -70,13 +70,14 @@ from __future__ import annotations
 import argparse
 import os
 import time
-from typing import Callable, Sequence, Tuple
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.analysis.contracts import contract
 from repro.core import posterior, routing
 from repro.core.partition import PartitionGrid
 from repro.core.psvgp_spmd import grid_matches_mesh, shift_perm
@@ -201,6 +202,15 @@ def cache_in_specs(cache_like, pspec) -> posterior.PosteriorCache:
     return jax.tree.map(lambda _: pspec, cache_like)
 
 
+@contract(
+    args={
+        "hx": "(P, 9, Q, 2)",
+        "corner_slot": "(P, Q, 4)",
+        "corner_w": "(P, Q, 4)",
+    },
+    returns=("(P, Q)", "(P, Q)"),
+    invariants=("outputs-f32",),
+)
 def make_sharded_blend(
     mesh: Mesh,
     axes: Sequence[str],
@@ -302,7 +312,8 @@ def make_sharded_blend(
 
 
 def train_demo_surface(
-    *, seed: int, n: int, grid_side: int, m: int, train_iters: int
+    *, seed: int, n: int, grid_side: int, m: int, train_iters: int,
+    fit_cfg=None,
 ):
     """The ONE training recipe every serving driver/benchmark demos against
     (``serve --gp``, ``serve --gp --sharded``, ``benchmarks.bench_serve``):
@@ -312,19 +323,31 @@ def train_demo_surface(
     posterior.
 
     Returns (ds, fitted) — the dataset (for query-domain bounds) and the
-    ``repro.api.FittedPSVGP`` serving bundle.
+    ``repro.api.FittedPSVGP`` serving bundle. An explicit ``fit_cfg`` (the
+    ``--config session.json`` lane) replaces the flag-derived FitConfig
+    wholesale; the dataset size ``n`` stays a CLI concern either way.
     """
     from repro import api
     from repro.data.spatial import e3sm_like_field
 
-    ds = e3sm_like_field(n=n, seed=seed)
-    fitted = api.fit(
-        api.FitConfig(grid=grid_side, m=m, train_iters=train_iters, seed=seed),
-        ds, verbose=True,
-    )
+    if fit_cfg is None:
+        fit_cfg = api.FitConfig(
+            grid=grid_side, m=m, train_iters=train_iters, seed=seed
+        )
+    ds = e3sm_like_field(n=n, seed=fit_cfg.seed)
+    fitted = api.fit(fit_cfg, ds, verbose=True)
     return ds, fitted
 
 
+@contract(
+    route={
+        "xq": "(P, Q, D)",
+        "stacked": "(P, 9, Q, D)",
+        "corner_slot": "(P, Q, 4)",
+        "corner_w": "(P, Q, 4)",
+    },
+    invariants=("q_max-matches-policy", "q_max-aligned"),
+)
 def make_request_stages(
     grid: PartitionGrid,
     blend_fn: Callable,
@@ -426,7 +449,7 @@ def pipelined_request_loop(
     *,
     warm: bool = True,
     on_result: Callable | None = None,
-) -> Tuple[dict, float]:
+) -> tuple[dict, float]:
     """The overlapped serving measurement loop (double-buffered).
 
     Batch t is submitted to the mesh, then batch t+1 is ROUTED ON THE HOST
@@ -475,14 +498,16 @@ def pipelined_request_loop(
     return pct, sum(len(q) for q in batches) / wall
 
 
-def load_or_train(args, *, ensure_devices: bool = False):
+def load_or_train(args, *, ensure_devices: bool = False, fit_cfg=None):
     """The shared fit-or-load front of both GP serving CLIs: returns
     (ds, fitted) where ds is None when serving from a persisted artifact
     (``--gp-artifact``; no retraining on that path). ``--gp-save``
     persists the freshly trained artifact. ``ensure_devices`` (the
     sharded caller) forces one virtual device per artifact partition and
     MUST then run before any other jax work — the artifact's grid side is
-    peeked from pure JSON so the count can be forced first.
+    peeked from pure JSON so the count can be forced first. ``fit_cfg``
+    (a session file's fit section) replaces the flag-derived training
+    config on the training path.
     """
     from repro import api
 
@@ -497,7 +522,7 @@ def load_or_train(args, *, ensure_devices: bool = False):
     else:
         ds, fitted = train_demo_surface(
             seed=args.seed, n=args.gp_n, grid_side=args.gp_grid,
-            m=args.gp_m, train_iters=args.gp_train_iters,
+            m=args.gp_m, train_iters=args.gp_train_iters, fit_cfg=fit_cfg,
         )
     if getattr(args, "gp_save", None):
         fitted.save(args.gp_save)
@@ -531,6 +556,27 @@ def query_batches(
     ]
 
 
+def session_configs(args, *, expect_mode: str):
+    """The ``--config session.json`` lane shared by both serving CLIs:
+    returns (fit_cfg, serve_cfg) — (None, None) without the flag. Loading
+    is pure JSON (``api.load_session`` is stdlib-only), so the sharded
+    caller can still force virtual devices afterwards. A serve section
+    whose mode contradicts the running entry point is an error, not a
+    silent reroute."""
+    if not getattr(args, "config", None):
+        return None, None
+    from repro.api.config import load_session
+
+    fit_cfg, serve_cfg = load_session(args.config)
+    if serve_cfg is not None and serve_cfg.mode != expect_mode:
+        raise SystemExit(
+            f"--config {args.config}: serve section has mode="
+            f"{serve_cfg.mode!r} but this entry point serves "
+            f"{expect_mode!r} (pick the matching CLI or fix the session)"
+        )
+    return fit_cfg, serve_cfg
+
+
 def serve_sharded(args) -> dict:
     """Fit (or load) through ``repro.api`` and serve the routed query loop
     from the mesh-sharded cache — this CLI is a thin shim: flags parse
@@ -543,21 +589,24 @@ def serve_sharded(args) -> dict:
     replicated path on the first batch and the streaming-q_max policy
     counters.
     """
+    fit_cfg, serve_cfg = session_configs(args, expect_mode="sharded")
     if not getattr(args, "gp_artifact", None):
-        ensure_host_devices(args.gp_grid * args.gp_grid)
+        grid_side = fit_cfg.grid if fit_cfg is not None else args.gp_grid
+        ensure_host_devices(grid_side * grid_side)
     # (the artifact path sizes the device count from the artifact's own
     # grid — load_or_train peeks it from pure JSON before any jax work)
 
     from repro import api
 
-    ds, fitted = load_or_train(args, ensure_devices=True)
+    ds, fitted = load_or_train(args, ensure_devices=True, fit_cfg=fit_cfg)
     grid = fitted.grid
-    serve_cfg = api.ServeConfig(
-        mode="sharded",
-        pipeline="serial" if getattr(args, "gp_serial", False) else "pipelined",
-        router=getattr(args, "gp_router", "single"),
-        backend="auto",
-    )
+    if serve_cfg is None:
+        serve_cfg = api.ServeConfig(
+            mode="sharded",
+            pipeline="serial" if getattr(args, "gp_serial", False) else "pipelined",
+            router=getattr(args, "gp_router", "single"),
+            backend="auto",
+        )
     server = api.Server(fitted, serve_cfg)
     total_b, device_b = server.cache_bytes
     print(f"cache sharded over {server.mesh.size} devices: {total_b/1e6:.2f} MB total, "
@@ -607,7 +656,7 @@ def serve_sharded(args) -> dict:
     return rec
 
 
-def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> Tuple[dict, float]:
+def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> tuple[dict, float]:
     """The SERIAL serving measurement loop (shared by ``serve --gp``, the
     ``--gp-serial`` sharded mode and ``benchmarks.bench_serve``'s
     replicated + serial lanes, so their SLO reports stay comparable; the
@@ -640,7 +689,7 @@ def timed_request_loop(answer: Callable, batches, *, warm: bool = True) -> Tuple
 
 def prepass_routing(
     grid: PartitionGrid, batches, *, headroom: float = 1.25, pad_multiple: int = 8
-) -> Tuple[int, list]:
+) -> tuple[int, list]:
     """Whole-stream q_max prepass, for streams known up front (benchmarks,
     batch jobs): one q_max covering every batch = single compile, the
     observed max bucket count with headroom, rounded with the SAME
@@ -674,7 +723,7 @@ def fixed_q_max(
     )[0]
 
 
-def cache_memory_bytes(cache: posterior.PosteriorCache) -> Tuple[int, int]:
+def cache_memory_bytes(cache: posterior.PosteriorCache) -> tuple[int, int]:
     """(total, per-device-addressable) bytes of the cache factor leaves."""
     total = sum(leaf.nbytes for leaf in jax.tree.leaves(cache))
     per_dev = 0
@@ -718,6 +767,13 @@ def add_gp_args(ap: argparse.ArgumentParser) -> None:
                          "training (repro.api Server.from_artifact); "
                          "ignores the --gp-n/--gp-m/--gp-train-iters "
                          "training flags")
+    ap.add_argument("--config", metavar="SESSION_JSON", default=None,
+                    help="session file with optional 'fit' and 'serve' "
+                         "sections (repro.api load_session). The fit "
+                         "section replaces the --gp-grid/--gp-m/"
+                         "--gp-train-iters training flags; the serve "
+                         "section replaces --gp-serial/--gp-router (its "
+                         "mode must match the chosen entry point)")
 
 
 def main() -> None:

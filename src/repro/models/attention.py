@@ -13,7 +13,6 @@ with kv_rank, not with H*hd — the whole point of caching latents.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,10 +120,10 @@ def gqa_forward(
     positions: jnp.ndarray,
     *,
     window: int = 0,
-    cache: Optional[Params] = None,
-    cache_pos: Optional[jnp.ndarray] = None,
-    encoder_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
-) -> Tuple[jnp.ndarray, Optional[Params]]:
+    cache: Params | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    encoder_kv: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
     """One attention call.
 
     Modes:
@@ -238,9 +237,9 @@ def mla_forward(
     x: jnp.ndarray,
     positions: jnp.ndarray,
     *,
-    cache: Optional[Params] = None,
-    cache_pos: Optional[jnp.ndarray] = None,
-) -> Tuple[jnp.ndarray, Optional[Params]]:
+    cache: Params | None = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
     a: MLAConfig = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads

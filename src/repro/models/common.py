@@ -5,12 +5,11 @@ trivially checkpointable, and sharding rules match on dict paths.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
-Params = Dict[str, jnp.ndarray]
+Params = dict[str, jnp.ndarray]
 
 
 # --------------------------------------------------------------------------
@@ -18,13 +17,13 @@ Params = Dict[str, jnp.ndarray]
 # --------------------------------------------------------------------------
 
 
-def dense_init(key: jax.Array, shape: Tuple[int, ...], in_axis: int = 0) -> jnp.ndarray:
+def dense_init(key: jax.Array, shape: tuple[int, ...], in_axis: int = 0) -> jnp.ndarray:
     """LeCun-normal in fp32 (params are always fp32; activations may be bf16)."""
     fan_in = shape[in_axis]
     return (jax.random.normal(key, shape) / jnp.sqrt(fan_in)).astype(jnp.float32)
 
 
-def embed_init(key: jax.Array, shape: Tuple[int, ...]) -> jnp.ndarray:
+def embed_init(key: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
     return (jax.random.normal(key, shape) * 0.02).astype(jnp.float32)
 
 
@@ -53,7 +52,7 @@ def layer_norm(x, scale, bias, eps: float = 1e-5):
 # --------------------------------------------------------------------------
 
 
-def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> tuple[jnp.ndarray, jnp.ndarray]:
     """positions (...,) -> cos/sin tables (..., dim/2)."""
     freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
     ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)

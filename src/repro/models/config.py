@@ -14,7 +14,6 @@ the 80-layer configs with 512 virtual devices on one CPU).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +29,16 @@ class MoEConfig:
     dispatch_groups: int = 32  # GShard-style rank/capacity groups, aligned
     # with the data shards so dispatch ranks never cross devices (§Perf)
 
+    def __post_init__(self) -> None:
+        if self.num_experts <= 0 or self.d_expert <= 0:
+            raise ValueError("num_experts and d_expert must be positive")
+        if not 1 <= self.top_k <= self.num_experts:
+            raise ValueError(f"top_k={self.top_k} outside [1, {self.num_experts}]")
+        if self.num_shared < 0 or self.capacity_factor <= 0 or self.dispatch_groups <= 0:
+            raise ValueError("num_shared >= 0, capacity_factor/dispatch_groups > 0")
+        if self.first_layer_dense and self.dense_d_ff <= 0:
+            raise ValueError("first_layer_dense requires dense_d_ff > 0")
+
 
 @dataclasses.dataclass(frozen=True)
 class MLAConfig:
@@ -41,6 +50,12 @@ class MLAConfig:
     qk_rope_head_dim: int
     v_head_dim: int
 
+    def __post_init__(self) -> None:
+        if self.q_lora_rank < 0 or self.kv_lora_rank <= 0:
+            raise ValueError("q_lora_rank >= 0 and kv_lora_rank > 0 required")
+        if min(self.qk_nope_head_dim, self.qk_rope_head_dim, self.v_head_dim) <= 0:
+            raise ValueError("MLA head dims must be positive")
+
 
 @dataclasses.dataclass(frozen=True)
 class EncoderConfig:
@@ -51,6 +66,10 @@ class EncoderConfig:
     num_frames: int  # encoder sequence length (whisper-base: 1500)
     frontend_dim: int  # embedding dim delivered by the stubbed conv frontend
 
+    def __post_init__(self) -> None:
+        if min(self.num_layers, self.num_frames, self.frontend_dim) <= 0:
+            raise ValueError("encoder dims must be positive")
+
 
 @dataclasses.dataclass(frozen=True)
 class VisionStubConfig:
@@ -58,6 +77,10 @@ class VisionStubConfig:
 
     num_patches: int  # patches prepended per sample
     vit_dim: int  # patch embedding dim delivered by the stubbed ViT
+
+    def __post_init__(self) -> None:
+        if self.num_patches <= 0 or self.vit_dim <= 0:
+            raise ValueError("vision stub dims must be positive")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,7 +95,7 @@ class ModelConfig:
     vocab_size: int
     head_dim: int = 0  # 0 -> d_model // num_heads
     # --- layer composition ---
-    block_pattern: Tuple[str, ...] = ("attn",)
+    block_pattern: tuple[str, ...] = ("attn",)
     # block kinds: attn | local_attn | mla | mlstm | slstm | rglru
     mlp_kind: str = "swiglu"  # swiglu | gelu | none (ssm blocks own their mlp)
     # --- attention options ---
@@ -89,10 +112,10 @@ class ModelConfig:
     rnn_width: int = 0  # RG-LRU / xLSTM inner width (0 -> d_model)
     conv_width: int = 4  # temporal conv in recurrent blocks
     # --- sub-configs ---
-    moe: Optional[MoEConfig] = None
-    mla: Optional[MLAConfig] = None
-    encoder: Optional[EncoderConfig] = None
-    vision: Optional[VisionStubConfig] = None
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    encoder: EncoderConfig | None = None
+    vision: VisionStubConfig | None = None
     # --- misc ---
     tie_embeddings: bool = False
     norm_eps: float = 1e-6
@@ -102,6 +125,12 @@ class ModelConfig:
     # the dry-run's reduced-depth cost measurements: XLA cost_analysis
     # counts a while body once, unrolled bodies are counted per period)
     citation: str = ""
+
+    def __post_init__(self) -> None:
+        # construction-time validation (RR004): the full cross-field check
+        # lives in validate(); calling it here means an illegal combination
+        # can never travel past the constructor.
+        self.validate()
 
     @property
     def resolved_head_dim(self) -> int:
@@ -125,7 +154,7 @@ class ModelConfig:
         return self.num_layers // self.period
 
     @property
-    def remainder_pattern(self) -> Tuple[str, ...]:
+    def remainder_pattern(self) -> tuple[str, ...]:
         return self.block_pattern[: self.num_layers % self.period]
 
     def validate(self) -> "ModelConfig":

@@ -12,7 +12,6 @@ under SPMD (visible in the roofline's collective bytes).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,7 @@ def init_moe_params(key: jax.Array, cfg: ModelConfig) -> Params:
     return p
 
 
-def moe_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x (B, S, D) -> (out (B, S, D), aux load-balance loss scalar).
 
     Under a multi-device mesh with a "model" axis this routes through the
@@ -62,7 +61,7 @@ def moe_forward(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarra
     return _moe_forward_local(p, cfg, x)
 
 
-def _moe_forward_local(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _moe_forward_local(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     m: MoEConfig = cfg.moe
     B, S, D = x.shape
     E, K = m.num_experts, m.top_k
@@ -146,7 +145,7 @@ def _moe_forward_local(p: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp
     return out.reshape(B, S, D), aux
 
 
-def _moe_forward_spmd(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _moe_forward_spmd(p: Params, cfg: ModelConfig, x: jnp.ndarray, mesh) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Manually partitioned MoE (§Perf-2, beyond-paper).
 
     Layout: tokens sharded over the (pod, data) axes (replicated over

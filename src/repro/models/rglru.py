@@ -17,7 +17,6 @@ update with (conv window, h) carried as cache.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,7 @@ def init_rglru_params(key: jax.Array, cfg: ModelConfig) -> Params:
     }
 
 
-def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, state: Optional[jnp.ndarray]):
+def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, state: jnp.ndarray | None):
     """Depthwise causal conv. u (B, S, W), kernel (cw, W).
     state (B, cw-1, W) holds the trailing inputs for streaming decode."""
     cw = kernel.shape[0]
@@ -61,7 +60,7 @@ def _causal_conv(u: jnp.ndarray, kernel: jnp.ndarray, state: Optional[jnp.ndarra
     return out, new_state
 
 
-def _rglru_scan(u: jnp.ndarray, a: jnp.ndarray, h0: Optional[jnp.ndarray]) -> jnp.ndarray:
+def _rglru_scan(u: jnp.ndarray, a: jnp.ndarray, h0: jnp.ndarray | None) -> jnp.ndarray:
     """h_t = a_t h_{t-1} + b_t via associative scan. u=b (B,S,W), a (B,S,W)."""
     if h0 is not None:
         # fold the initial state in as a virtual step 0
@@ -82,8 +81,8 @@ def rglru_forward(
     cfg: ModelConfig,
     x: jnp.ndarray,
     *,
-    cache: Optional[Params] = None,
-) -> Tuple[jnp.ndarray, Optional[Params]]:
+    cache: Params | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
     """x (B, S, D) -> (out (B, S, D), new cache {"conv", "h"})."""
     dt = x.dtype
     branch_a = jax.nn.gelu(x @ p["w_a"].astype(dt))  # (B,S,W)

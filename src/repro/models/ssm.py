@@ -21,7 +21,6 @@ are O(width) vectors so the memory is fine at any S.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,9 +98,9 @@ def mlstm_forward(
     cfg: ModelConfig,
     x: jnp.ndarray,
     *,
-    cache: Optional[Params] = None,
+    cache: Params | None = None,
     chunk: int = 64,
-) -> Tuple[jnp.ndarray, Optional[Params]]:
+) -> tuple[jnp.ndarray, Params | None]:
     """x (B, S, D) -> (out, cache {"conv","state","norm"})."""
     from repro.models.rglru import _causal_conv  # shared depthwise conv
 
@@ -216,8 +215,8 @@ def slstm_forward(
     cfg: ModelConfig,
     x: jnp.ndarray,
     *,
-    cache: Optional[Params] = None,
-) -> Tuple[jnp.ndarray, Optional[Params]]:
+    cache: Params | None = None,
+) -> tuple[jnp.ndarray, Params | None]:
     """Sequential sLSTM with stabilized exponential gating.
 
     Carries (c, n, h, m): cell, normalizer, hidden, log-max stabilizer.

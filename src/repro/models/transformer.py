@@ -16,7 +16,7 @@ KV / recurrent caches mirror the parameter structure:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ from repro.models.common import (
 )
 from repro.models.config import ModelConfig
 
-Cache = Dict[str, Any]
+Cache = dict[str, Any]
 
 
 # --------------------------------------------------------------------------
@@ -112,10 +112,10 @@ def layer_forward(
     x: jnp.ndarray,
     positions: jnp.ndarray,
     *,
-    cache: Optional[Cache] = None,
-    cache_pos: Optional[jnp.ndarray] = None,
-    encoder_out: Optional[jnp.ndarray] = None,
-) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    cache: Cache | None = None,
+    cache_pos: jnp.ndarray | None = None,
+    encoder_out: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, Cache | None, jnp.ndarray]:
     """Returns (x, new_cache, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -139,7 +139,7 @@ def layer_forward(
         raise ValueError(kind)
     x = x + out
 
-    new_cache: Optional[Cache] = None
+    new_cache: Cache | None = None
     if cache is not None:
         new_cache = dict(new_mix or {})
 
@@ -293,7 +293,7 @@ def _encoder_forward(p: Params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.nd
     if cfg.unroll:
         n = jax.tree.leaves(p["encoder"])[0].shape[0]
         for i in range(n):
-            x, _ = body(x, jax.tree.map(lambda a: a[i], p["encoder"]))
+            x, _ = body(x, jax.tree.map(lambda a, i=i: a[i], p["encoder"]))
     else:
         x, _ = jax.lax.scan(body, x, p["encoder"])
     return rms_norm(x, p["enc_norm"], cfg.norm_eps)
@@ -304,11 +304,11 @@ def forward(
     cfg: ModelConfig,
     tokens: jnp.ndarray,
     *,
-    frames: Optional[jnp.ndarray] = None,
-    patches: Optional[jnp.ndarray] = None,
-    cache: Optional[Cache] = None,
-    cache_pos: Optional[jnp.ndarray] = None,
-) -> Tuple[jnp.ndarray, Optional[Cache], jnp.ndarray]:
+    frames: jnp.ndarray | None = None,
+    patches: jnp.ndarray | None = None,
+    cache: Cache | None = None,
+    cache_pos: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, Cache | None, jnp.ndarray]:
     """Full model forward.
 
     tokens (B, S) int32. frames: (B, T, F) stub audio embeddings (enc-dec).
@@ -375,8 +375,8 @@ def forward(
         collected = []
         carry = (x, aux_total)
         for pi in range(n_per):
-            p_per = jax.tree.map(lambda a: a[pi], params["stack"])
-            c_per = jax.tree.map(lambda a: a[pi], stack_cache) if cache is not None else {}
+            p_per = jax.tree.map(lambda a, pi=pi: a[pi], params["stack"])
+            c_per = jax.tree.map(lambda a, pi=pi: a[pi], stack_cache) if cache is not None else {}
             carry, nc = body(carry, (p_per, c_per))
             collected.append(nc)
         (x, aux_total) = carry
@@ -388,7 +388,7 @@ def forward(
             body, (x, aux_total), (params["stack"], stack_cache)
         )
 
-    new_cache: Optional[Cache] = None
+    new_cache: Cache | None = None
     if cache is not None:
         new_cache = {"stack": new_stack_cache, "remainder": []}
         if "prelude" in params:

@@ -6,7 +6,7 @@ over the PSVGP partition axis and shards over the mesh exactly like params.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +39,7 @@ def adam_update(
     b1: float = 0.9,
     b2: float = 0.999,
     eps: float = 1e-8,
-) -> Tuple[PyTree, AdamState]:
+) -> tuple[PyTree, AdamState]:
     """One Adam step minimizing the loss whose gradient is ``grads``."""
     step = state.step + 1
     mu, nu = _moments(grads, state, b1, b2)
@@ -65,7 +65,7 @@ def adamw_update(
     b2: float = 0.95,
     eps: float = 1e-8,
     weight_decay: float = 0.1,
-) -> Tuple[PyTree, AdamState]:
+) -> tuple[PyTree, AdamState]:
     """AdamW (decoupled weight decay) for the LM substrate."""
     step = state.step + 1
     mu, nu = _moments(grads, state, b1, b2)

@@ -22,7 +22,8 @@ Exports
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec

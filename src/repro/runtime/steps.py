@@ -8,7 +8,7 @@ These are the functions the launcher lowers on the production mesh:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(logz - gold)
 
 
-def _loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
+def _loss_fn(params, cfg: ModelConfig, batch: dict[str, jnp.ndarray]):
     logits, _, aux = transformer.forward(
         params,
         cfg,
@@ -67,7 +67,7 @@ def make_train_step(
     the grad accumulator is params-shaped, so with FSDP it stays sharded).
     """
 
-    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+    def train_step(state: TrainState, batch: dict[str, jnp.ndarray]):
         if microbatches == 1:
             (loss, (ce, aux)), grads = jax.value_and_grad(_loss_fn, has_aux=True)(
                 state.params, cfg, batch

@@ -15,7 +15,8 @@ carry a leading period axis which is never sharded.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 import numpy as np
@@ -79,12 +80,12 @@ _MOE_RULES = {  # 3D expert-stacked weights: expert-parallel on model axis
 }
 
 
-def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
     """Mesh axes used for batch sharding (everything except 'model')."""
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-def _axis_ok(dim: int, axis: Optional[str], mesh: Mesh) -> Optional[str]:
+def _axis_ok(dim: int, axis: str | None, mesh: Mesh) -> str | None:
     if axis is None:
         return None
     size = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
@@ -105,21 +106,21 @@ def _spec_for(path_names: Sequence[str], leaf, mesh: Mesh, fsdp: bool = False) -
     if nlead < 0:
         return P()
     dims = leaf.shape[nlead:]
-    axes = list(_axis_ok(d, a, mesh) for d, a in zip(dims, rule))
+    axes = list(_axis_ok(d, a, mesh) for d, a in zip(dims, rule, strict=True))
     if fsdp:
         # ZeRO-3 style: additionally shard the first replicated dim of every
         # weight over the (pod, data) axes. XLA inserts the weight
         # all-gather before use and the reduce-scatter on the grad — the
         # classic memory <-> collective trade (EXPERIMENTS.md §Perf).
         daxes = data_axes(mesh)
-        for i, (d, a) in enumerate(zip(dims, axes)):
+        for i, (d, a) in enumerate(zip(dims, axes, strict=True)):
             if a is None and _axis_ok(d, daxes, mesh) is not None:
                 axes[i] = daxes
                 break
     return P(*((None,) * nlead + tuple(axes)))
 
 
-def _path_names(path) -> Tuple[str, ...]:
+def _path_names(path) -> tuple[str, ...]:
     names = []
     for e in path:
         if isinstance(e, jax.tree_util.DictKey):

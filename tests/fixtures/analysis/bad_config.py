@@ -1,0 +1,8 @@
+"""RR004 fixture: a frozen config dataclass that never validates."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SilentConfig:
+    mode: str = "replicated"
+    q_max: int = -3  # an illegal value nothing will ever reject

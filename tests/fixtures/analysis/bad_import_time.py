@@ -1,0 +1,13 @@
+"""RR001 fixture: device-array creation at module import time.
+
+The gp/likelihoods.py bug class: this initializes the jax backend before
+any launcher can force the virtual device count.
+"""
+import jax.numpy as jnp
+
+QUAD_NODES = jnp.linspace(-1.0, 1.0, 8)  # <- the violation
+
+
+def uses_it(x):
+    # lazy use is fine; only the module-scope creation above is the bug
+    return jnp.sum(QUAD_NODES * x)

@@ -1,0 +1,6 @@
+"""RR003 fixture: bare float64 in a kernel hot path (suffix-matched)."""
+import numpy as np
+
+
+def stage_factors(w):
+    return np.asarray(w).astype(np.float64)  # <- the violation

@@ -1,0 +1,12 @@
+"""noqa fixture: the same violations as the bad files, each suppressed
+with the per-line escape hatch — the linter must report nothing here."""
+import dataclasses
+
+import jax.numpy as jnp
+
+QUAD_NODES = jnp.linspace(-1.0, 1.0, 8)  # repro: noqa-RR001
+
+
+@dataclasses.dataclass(frozen=True)
+class KnownUnvalidated:  # repro: noqa-RR004
+    mode: str = "replicated"

@@ -1,0 +1,409 @@
+"""The static verification layer's own tests.
+
+Three kinds of coverage:
+
+  * the linter catches what it claims to catch — every known-bad fixture
+    in tests/fixtures/analysis/ is flagged by EXACTLY its rule, synthetic
+    bad HLO text trips each HLO check, and injected violations in real
+    lowered programs (an all_gather smuggled into a shard_map) are found;
+  * the escape hatches and declarations are load-bearing — noqa lines
+    suppress, deleting a @contract is a finding, unknown invariant names
+    are findings, manifest rot (a lane dict that stops parsing as a
+    ServeConfig) is a finding;
+  * the shipped codebase is CLEAN — the AST pass over src/, the host-side
+    contract harnesses in-process, and the full three-pass CLI in a
+    subprocess (which is also the < 120 s budget check, on a small grid).
+
+Mesh-requiring checks (HLO lowering, sharded contracts) run via the CLI
+subprocess: the analysis front door forces virtual host devices before
+jax initializes, which an already-initialized pytest process cannot.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import Finding, astlint, contracts, hlo
+from repro.analysis import invariants as inv
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures", "analysis")
+
+
+def _fixture(rel):
+    path = os.path.join(FIXTURES, rel)
+    with open(path, encoding="utf-8") as f:
+        return path, f.read()
+
+
+# --------------------------------------------------------------------------
+# Finding / manifest basics
+# --------------------------------------------------------------------------
+
+
+def test_finding_validates():
+    with pytest.raises(ValueError):
+        Finding("nonsense-pass", "R", "w", "m")
+    with pytest.raises(ValueError):
+        Finding("ast", "", "w", "m")
+    f = Finding("ast", "RR001", "a.py:3", "boom")
+    assert f.to_dict()["rule"] == "RR001" and "a.py:3" in str(f)
+
+
+def test_lane_manifest_is_valid_serve_configs():
+    from repro.api.config import ServeConfig
+
+    assert len(inv.LANES) == 14
+    names = [l.name for l in inv.LANES]
+    assert len(set(names)) == len(names)
+    for lane in inv.LANES:
+        cfg = ServeConfig.from_dict(lane.serve)  # manifest rot -> raises
+        assert cfg.mode in ("replicated", "sharded")
+    # exactly 4 distinct device programs behind the 14 lanes
+    assert len({l.program_key for l in inv.LANES}) == 4
+
+
+def test_lane_invariant_rejects_bad_declarations():
+    with pytest.raises(ValueError):
+        inv.LaneInvariant(
+            name="x", serve={}, program="warp-drive", backend="ref",
+            max_collective_permute=0, forbidden_ops=(),
+        )
+    with pytest.raises(ValueError):
+        inv.LaneInvariant(
+            name="x", serve={}, program="sharded-blend", backend="ref",
+            max_collective_permute=2, min_collective_permute=4,
+            forbidden_ops=(),
+        )
+    with pytest.raises(ValueError):
+        inv.LaneInvariant(
+            name="x", serve={}, program="sharded-blend", backend="ref",
+            max_collective_permute=8, forbidden_ops=("warp-gather",),
+        )
+
+
+# --------------------------------------------------------------------------
+# HLO pass: text checks on synthetic programs (no jax needed)
+# --------------------------------------------------------------------------
+
+SHARDED_LANE = next(l for l in inv.LANES if l.program == "sharded-blend")
+REPLICATED_LANE = next(l for l in inv.LANES if l.program == "replicated-blend")
+
+# a minimal halo-shaped program: 4 ppermutes, f32 only
+GOOD_TEXT = "\n".join(
+    f'%r{i} = "stablehlo.collective_permute"(%a) : tensor<9x64xf32>'
+    for i in range(4)
+)
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_hlo_good_text_is_clean():
+    findings, counts = hlo.check_text(SHARDED_LANE, GOOD_TEXT)
+    assert findings == [] and counts["collective-permute"] == 4
+
+
+@pytest.mark.parametrize(
+    "mutation,rule",
+    [
+        # a gathering collective in a sharded program
+        ('%g = "stablehlo.all_gather"(%a) : tensor<16x8xf32>', "HLO-FORBIDDEN-OP"),
+        # HLO (dashed) spelling must be caught too
+        ("%g = all-gather(%a)", "HLO-FORBIDDEN-OP"),
+        ("%g = all-reduce-start(%a)", "HLO-FORBIDDEN-OP"),
+        # an f64 leak
+        ("%c = stablehlo.constant dense<0.5> : tensor<64xf64>", "HLO-DTYPE-F64"),
+        ("%c = f64[9,64] constant(...)", "HLO-DTYPE-F64"),
+        # a host transfer inside the compiled program
+        ('%h = "stablehlo.infeed"(%tok)', "HLO-HOST-TRANSFER"),
+        ("%h = xla_python_cpu_callback(%a)", "HLO-HOST-TRANSFER"),
+    ],
+)
+def test_hlo_bad_text_caught_by_exactly_the_expected_rule(mutation, rule):
+    findings, _ = hlo.check_text(SHARDED_LANE, GOOD_TEXT + "\n" + mutation)
+    assert _rules(findings) == [rule], findings
+
+
+def test_hlo_budget_and_floor():
+    over = GOOD_TEXT + "\n" + "\n".join(
+        f'%e{i} = "stablehlo.collective_permute"(%a)' for i in range(9)
+    )
+    findings, counts = hlo.check_text(SHARDED_LANE, over)
+    assert _rules(findings) == ["HLO-COLLECTIVE-BUDGET"] and counts[
+        "collective-permute"
+    ] == 13
+    # the floor: a sharded program whose halo vanished is wrong too
+    findings, _ = hlo.check_text(SHARDED_LANE, "%z = stablehlo.add(%a, %b)")
+    assert _rules(findings) == ["HLO-COLLECTIVE-MISSING"]
+
+
+def test_hlo_replicated_lane_forbids_all_collectives():
+    findings, _ = hlo.check_text(REPLICATED_LANE, GOOD_TEXT)
+    assert "HLO-COLLECTIVE-BUDGET" in _rules(findings)
+    findings, _ = hlo.check_text(
+        REPLICATED_LANE, '%r = "stablehlo.all_reduce"(%a)'
+    )
+    assert "HLO-FORBIDDEN-OP" in _rules(findings)
+
+
+def test_hlo_manifest_rot_is_a_finding():
+    rotten = inv.LaneInvariant(
+        name="rotten", serve={"mode": "sharded", "warp_factor": 9},
+        program="sharded-blend", backend="ref",
+        max_collective_permute=8, forbidden_ops=(),
+    )
+    findings, report = hlo.run(lanes=(rotten,))
+    assert _rules(findings) == ["HLO-MANIFEST"]
+    assert report["lanes"] == []  # never lowered
+
+
+# --------------------------------------------------------------------------
+# AST pass: fixtures each caught by exactly the expected rule
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "rel,rule",
+    [
+        ("bad_import_time.py", "RR001"),
+        (os.path.join("repro", "core", "routing.py"), "RR002"),
+        (os.path.join("repro", "kernels", "bad_f64.py"), "RR003"),
+        ("bad_config.py", "RR004"),
+    ],
+)
+def test_fixture_caught_by_exactly_the_expected_rule(rel, rule):
+    path, source = _fixture(rel)
+    findings = astlint.lint_source(path, source)
+    assert findings, f"{rel}: nothing caught"
+    assert _rules(findings) == [rule], findings
+
+
+def test_noqa_suppresses():
+    path, source = _fixture("suppressed_ok.py")
+    assert astlint.lint_source(path, source) == []
+    # and removing the noqa markers brings the findings back
+    stripped = "\n".join(
+        line.split("# repro: noqa-")[0] for line in source.splitlines()
+    )
+    assert _rules(astlint.lint_source(path, stripped)) == ["RR001", "RR004"]
+
+
+def test_rr002_declared_function_cannot_silently_vanish():
+    source = "import numpy as np\n"  # none of the declared functions exist
+    findings = astlint.lint_source("src/repro/core/routing.py", source)
+    assert findings and _rules(findings) == ["RR002"]
+    assert any("not found" in f.message for f in findings)
+
+
+def test_rr001_skips_lazy_contexts():
+    source = textwrap.dedent(
+        """
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        def f(x):
+            return jnp.asarray(x)
+
+        g = functools.partial(jax.jit, static_argnames=("k",))
+
+        @jax.jit
+        def h(x):
+            return x
+        """
+    )
+    assert astlint.lint_source("src/repro/x.py", source) == []
+
+
+def test_rr001_catches_function_default_args():
+    source = "import jax.numpy as jnp\ndef f(x=jnp.zeros(3)):\n    return x\n"
+    assert _rules(astlint.lint_source("src/repro/x.py", source)) == ["RR001"]
+
+
+def test_shipped_codebase_is_clean():
+    findings, report = astlint.run(os.path.join(REPO, "src"))
+    assert findings == [], [str(f) for f in findings]
+    assert report["files_scanned"] > 60
+
+
+def test_fixture_tree_is_dirty_end_to_end():
+    findings, _ = astlint.run(FIXTURES)
+    assert _rules(findings) == ["RR001", "RR002", "RR003", "RR004"]
+
+
+# --------------------------------------------------------------------------
+# Contracts pass
+# --------------------------------------------------------------------------
+
+
+def test_parse_and_unify():
+    assert contracts.parse_shape("(S, Q, 4)") == ("S", "Q", 4)
+    assert contracts.parse_shape("(N,)") == ("N",)
+    env = {}
+    assert contracts.unify("(S, Q)", (9, 64), env) is None
+    assert env == {"S": 9, "Q": 64}
+    assert contracts.unify("(S, 4)", (9, 4), env) is None
+    assert contracts.unify("(S, Q)", (8, 64), env)  # S rebind -> error
+    assert contracts.unify("(S, Q)", (9,), env)  # rank -> error
+    assert contracts.unify("(S, 4)", (9, 5), env)  # literal -> error
+    with pytest.raises(ValueError):
+        contracts.parse_shape("S, Q")
+
+
+def test_missing_contract_is_a_finding():
+    import importlib
+
+    target = contracts.EXPECTED_TARGETS[1]  # scatter_results, host-only
+    importlib.import_module(target.rsplit(".", 1)[0])  # populate registry
+    saved = contracts._REGISTRY.pop(target)
+    try:
+        findings, _ = contracts.run(targets=(target,), include_mesh=False)
+        assert _rules(findings) == ["CONTRACT-MISSING"]
+    finally:
+        contracts._REGISTRY[target] = saved
+
+
+def test_unknown_invariant_name_is_a_finding():
+    decl = contracts.ContractDecl(
+        target="repro.core.routing.scatter_results",
+        spec={"returns": "(N,)", "invariants": ("made-up-claim",)},
+    )
+    findings = contracts.harness_scatter_results(decl)
+    assert any(f.rule == "CONTRACT-DECL" for f in findings)
+
+
+def test_stale_shape_declaration_fails():
+    decl = contracts.ContractDecl(
+        target="repro.core.routing.scatter_results",
+        spec={"args": {"values": "(P, Q, 3)"}, "returns": "(N,)"},
+    )
+    findings = contracts.harness_scatter_results(decl)
+    assert any(f.rule == "CONTRACT-SHAPE" for f in findings)
+
+
+def test_host_side_contracts_clean_in_process():
+    findings, report = contracts.run(include_mesh=False)
+    assert findings == [], [str(f) for f in findings]
+    assert "repro.core.routing.scatter_results" in report["targets_checked"]
+    assert "repro.core.posterior.predict_cached_slots" in report["targets_checked"]
+
+
+# --------------------------------------------------------------------------
+# The CLI front door (subprocess: forces its own virtual devices)
+# --------------------------------------------------------------------------
+
+
+def _run_cli(*argv, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)  # the CLI must set this itself
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=timeout,
+    )
+
+
+def test_cli_full_run_clean_on_shipped_codebase(tmp_path):
+    out = tmp_path / "ANALYSIS.json"
+    r = _run_cli("--grid", "3", "--out", str(out))
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    report = json.loads(out.read_text())
+    assert report["total_findings"] == 0
+    lanes = report["passes"]["hlo"]["lanes"]
+    assert len(lanes) == len(inv.LANES)
+    by_name = {l["lane"]: l for l in lanes}
+    # the headline claims, as recorded artifacts: replicated collective-free,
+    # sharded exactly the 4 composed reverse-halo ppermutes
+    assert by_name["replicated/serial/single/ref"]["collectives"][
+        "collective-permute"] == 0
+    for name, rec in by_name.items():
+        if name.startswith("sharded/"):
+            assert rec["collectives"]["collective-permute"] == 4, name
+            assert rec["collectives"]["all-gather"] == 0, name
+    assert report["passes"]["contracts"]["targets_skipped"] == []
+    assert report["seconds"] < 120
+
+
+def test_cli_exits_nonzero_on_violations(tmp_path):
+    out = tmp_path / "ANALYSIS.json"
+    r = _run_cli(
+        "--passes", "ast", "--root", "tests/fixtures/analysis",
+        "--out", str(out),
+    )
+    assert r.returncode == 1, r.stdout[-2000:] + r.stderr[-2000:]
+    report = json.loads(out.read_text())
+    per_rule = report["passes"]["ast"]["findings_per_rule"]
+    assert all(per_rule[r] >= 1 for r in ("RR001", "RR002", "RR003", "RR004"))
+
+
+def test_cli_rejects_unknown_pass():
+    r = _run_cli("--passes", "vibes")
+    assert r.returncode == 2
+
+
+# --------------------------------------------------------------------------
+# Injected violation in a REAL lowered program (subprocess, own devices)
+# --------------------------------------------------------------------------
+
+_INJECT_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.analysis import hlo
+    from repro.analysis import invariants as inv
+    from repro.launch import serve_sharded as ss
+    from repro.runtime import compat
+
+    grid = hlo.probe_grid(4)
+    mesh = ss.mesh_for_grid(grid)
+
+    # an all_gather smuggled into a shard_map program: the factors move
+    gathered = jax.jit(compat.shard_map(
+        lambda x: jax.lax.all_gather(x, mesh.axis_names[0]),
+        mesh=mesh, in_specs=P(tuple(mesh.axis_names)), out_specs=P(),
+        check_vma=False,
+    ))
+    txt = gathered.lower(
+        jax.ShapeDtypeStruct((grid.num_partitions, 8), jnp.float32)
+    ).as_text()
+    lane = inv.LaneInvariant(
+        name="probe", serve={"mode": "sharded"}, program="sharded-blend",
+        backend="ref", max_collective_permute=8,
+        forbidden_ops=inv.GATHERING_COLLECTIVES,
+    )
+    findings, counts = hlo.check_text(lane, txt)
+    rules = sorted({f.rule for f in findings})
+    assert counts["all-gather"] >= 1, counts
+    assert rules == ["HLO-FORBIDDEN-OP"], findings
+
+    # and the REAL serving program stays clean under the same invariant
+    clean_txt = hlo.lower_program(("sharded-blend", "ref"))
+    lane4 = inv.LaneInvariant(
+        name="probe4", serve={"mode": "sharded"}, program="sharded-blend",
+        backend="ref", max_collective_permute=8, min_collective_permute=4,
+        forbidden_ops=inv.GATHERING_COLLECTIVES,
+    )
+    clean_findings, clean_counts = hlo.check_text(lane4, clean_txt)
+    assert clean_findings == [] and clean_counts["collective-permute"] == 4
+    print("OK")
+    """
+)
+
+
+def test_injected_all_gather_caught_in_real_lowered_program():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-c", _INJECT_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout

@@ -166,7 +166,7 @@ def test_fit_matches_pre_api_recipe_bitwise(tiny_fitted):
     static = psvgp.build(pcfg, data)
     state = psvgp.init(jax.random.PRNGKey(0), pcfg, data)
     state = psvgp.fit(static, state, data, 60)
-    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(fitted.state.params)):
+    for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(fitted.state.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(np.asarray(grid.x_edges), np.asarray(fitted.grid.x_edges))
 
@@ -184,7 +184,7 @@ def test_artifact_round_trip_replicated_bitwise(tiny_fitted, tmp_path):
     np.testing.assert_array_equal(loaded.grid.y_edges, fitted.grid.y_edges)
     import jax
 
-    for a, b in zip(jax.tree.leaves(fitted.cache), jax.tree.leaves(loaded.cache)):
+    for a, b in zip(jax.tree.leaves(fitted.cache), jax.tree.leaves(loaded.cache), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
     q = ds.x[:128]
@@ -360,7 +360,7 @@ _SHARDED_SCRIPT = textwrap.dedent(
         return [got[i] for i in range(len(batches))]
 
     def assert_bitwise(old, new, tag):
-        for i, ((mo, vo), (mn, vn)) in enumerate(zip(old, new)):
+        for i, ((mo, vo), (mn, vn)) in enumerate(zip(old, new, strict=True)):
             assert np.array_equal(mo, mn) and np.array_equal(vo, vn), (tag, i)
 
     # GOLDEN: serial and pipelined, single and two-level router
@@ -386,7 +386,7 @@ _SHARDED_SCRIPT = textwrap.dedent(
     ref = new_results(fitted, uni[:2], "single", "pipelined")
     for backend in ("pallas", "fused"):
         got = new_results(fitted, uni[:2], "single", "pipelined", backend=backend)
-        for (mr, vr), (mb, vb) in zip(ref, got):
+        for (mr, vr), (mb, vb) in zip(ref, got, strict=True):
             assert np.abs(mb - mr).max() <= 1e-4, backend
             assert np.abs(vb - vr).max() <= 1e-4, backend
     print("backends: pallas/fused match ref through the sharded program")

@@ -68,7 +68,7 @@ def test_smoke_forward_and_train_step(arch):
     # params actually changed
     d = max(
         float(jnp.max(jnp.abs(a - b)))
-        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params))
+        for a, b in zip(jax.tree.leaves(state.params), jax.tree.leaves(state2.params), strict=True)
     )
     assert d > 0
 

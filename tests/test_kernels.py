@@ -54,7 +54,7 @@ def test_svgp_projection_matches_oracle(B, m, d):
     lmm = jnp.linalg.cholesky(kmm)
     got = ops.svgp_projection(x, z, lls, lv, lmm)
     want = ops.svgp_projection_ref(x, z, lls, lv, lmm)
-    for g, w, name in zip(got, want, ("knm", "lk_t", "q_diag")):
+    for g, w, name in zip(got, want, ("knm", "lk_t", "q_diag"), strict=True):
         np.testing.assert_allclose(
             np.asarray(g), np.asarray(w), rtol=2e-4, atol=1e-4, err_msg=name
         )
@@ -112,7 +112,7 @@ def test_projection_gradients_match_ref():
     params = svgp.init_svgp_params(jax.random.PRNGKey(1), cfg, x_init=x)
     g0 = jax.grad(lambda p: svgp.elbo(p, cov_fn, x, y, use_pallas=False))(params)
     g1 = jax.grad(lambda p: svgp.elbo(p, cov_fn, x, y, use_pallas=True))(params)
-    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1), strict=True):
         scale = np.maximum(np.abs(np.asarray(a)), 1.0)
         np.testing.assert_allclose(
             np.asarray(a) / scale, np.asarray(b) / scale, atol=5e-3

@@ -44,7 +44,7 @@ _SCRIPT = textwrap.dedent(
     # aux is computed per data shard then averaged (GShard per-group
     # semantics) — close to but not identical with the global statistic
     np.testing.assert_allclose(float(aux), float(aux_ref), rtol=0.15)
-    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gref)):
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(gref), strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
     print("OK")
     """

@@ -62,12 +62,12 @@ def test_delta_zero_matches_independent_training(small_problem):
     # SAME seed: updates must differ (sanity that delta matters) while
     # delta=0 twice is bitwise identical.
     static_b, state_b = _train(data, delta=0.0, comm="gather", iters=50)
-    for a, b in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_b.params)):
+    for a, b in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_b.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     static_c, state_c = _train(data, delta=0.8, comm="gather", iters=50)
     diffs = [
         float(jnp.max(jnp.abs(a - c)))
-        for a, c in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_c.params))
+        for a, c in zip(jax.tree.leaves(state_a.params), jax.tree.leaves(state_c.params), strict=True)
     ]
     assert max(diffs) > 1e-6  # neighbor sampling actually changed training
 

@@ -58,7 +58,7 @@ _SCRIPT = textwrap.dedent(
     # across the 16 virtual devices; measured 1e-5..7e-5 across runs) and
     # each sqrt(nu)-normalized step multiplies it. A real exchange/weight
     # bug shows up at 1e-1 scale (2 x lr sign flips), 3 orders above this.
-    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
         np.testing.assert_allclose(la, lb, atol=2e-4)
 
     # the lowered SPMD program must actually contain a collective-permute —

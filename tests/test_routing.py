@@ -106,7 +106,7 @@ def test_routing_table_cells_passthrough():
     cells = routing.owning_cells(grid, pts)
     t0 = routing.build_routing_table(grid, pts)
     t1 = routing.build_routing_table(grid, pts, cells=cells)
-    for a, b in zip(t0, t1):
+    for a, b in zip(t0, t1, strict=True):
         np.testing.assert_array_equal(a, b)
     with pytest.raises(ValueError, match="cells"):
         routing.build_routing_table(grid, pts, cells=(cells[0][:5], cells[1][:5]))
@@ -162,7 +162,7 @@ def test_prepass_returns_reusable_cells():
     q_max, cells = ss.prepass_routing(grid, batches)
     assert q_max == ss.fixed_q_max(grid, batches)
     assert len(cells) == len(batches)
-    for q, c in zip(batches, cells):
+    for q, c in zip(batches, cells, strict=True):
         ix, iy = routing.owning_cells(grid, q)
         np.testing.assert_array_equal(c[0], ix)
         np.testing.assert_array_equal(c[1], iy)
@@ -316,12 +316,12 @@ def test_streaming_qmax_overflow_recovery_matches_prepass():
         )
     assert pol.overflows >= 1  # the late peak really burst the mark
     # every batch fully recovered (nothing dropped) at every mark
-    for q, t in zip(batches, tables_stream):
+    for q, t in zip(batches, tables_stream, strict=True):
         assert t.num_queries == len(q)
         np.testing.assert_array_equal(routing.scatter_results(t, t.xq), q)
     # the peak batch: policy mark == prepass mark, tables bitwise equal...
     assert tables_stream[-1].q_max == q_fix
-    for a, b in zip(tables_stream[-1], tables_fix[-1]):
+    for a, b in zip(tables_stream[-1], tables_fix[-1], strict=True):
         np.testing.assert_array_equal(a, b)
     # ...and so are the served results (single-host reference program)
     cov_fn = make_covariance("rbf")

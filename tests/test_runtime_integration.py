@@ -34,7 +34,7 @@ def test_lm_train_checkpoint_resume(tmp_path):
     for toks, tg in data[3:]:
         restored, m_resumed = ts(restored, {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tg)})
     np.testing.assert_allclose(float(m_direct["loss"]), float(m_resumed["loss"]), rtol=1e-6)
-    for a, b in zip(jax.tree.leaves(cont.params), jax.tree.leaves(restored.params)):
+    for a, b in zip(jax.tree.leaves(cont.params), jax.tree.leaves(restored.params), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

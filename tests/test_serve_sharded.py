@@ -19,11 +19,13 @@ subprocess with its own XLA_FLAGS. Covered there:
     (overlap is scheduling, never math), with the streaming q_max policy;
   * the fused slot-stacked Pallas program (use_pallas=True, interpret on
     CPU) matches the jnp program to 1e-5 inside the same shard_map;
-  * per-device cache-factor memory is exactly 1/P of replicated;
-  * the lowered program contains collective-permutes — few of them: the
-    composed reverse halo is 4, not the 36 per-slot hops of the old
-    program — and NO all-gather of the cache factors (the
-    decentralized-serving claim).
+  * per-device cache-factor memory is exactly 1/P of replicated.
+
+The STRUCTURAL claims about the lowered program (collective-permute
+budget 4..8, no all-gather of the factors, f32-only, no host transfers)
+moved out of this slow lane: they are checked on every push by the
+``repro.analysis`` HLO pass against the invariant manifest — see
+docs/analysis.md and tests/test_analysis.py.
 """
 import os
 import subprocess
@@ -137,18 +139,6 @@ _SCRIPT = textwrap.dedent(
     m_fu, v_fu = collect_f(submit_f(route_f(q)))
     np.testing.assert_allclose(m_fu, m_sh, atol=1e-5)
     np.testing.assert_allclose(v_fu, v_sh, atol=1e-5)
-
-    # --- the program must be halo-shaped: a handful of collective-permutes
-    # (composed reverse halo = 4 hops; the per-slot program had 36) and no
-    # all-gather of the factors ---
-    stacker = routing.make_halo_stacker(grid)
-    hx = stacker(table.xq)
-    txt = blend_fn.lower(cache_sh, hx, table.corner_slot, table.corner_w).as_text()
-    ncp = txt.count("collective-permute(") + txt.count("collective_permute")
-    assert ncp > 0, "no collective-permute in the lowered serving program"
-    assert ncp <= 8, f"reverse halo must stay composed (4 hops), found {ncp}"
-    assert "all-gather" not in txt and "all_gather" not in txt, \
-        "serving program gathers state — the cache must stay sharded"
     print("OK")
     """
 )

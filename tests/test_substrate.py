@@ -73,7 +73,7 @@ def test_checkpoint_roundtrip(tmp_path):
     p = save_train_state(str(tmp_path), 7, state)
     assert os.path.exists(os.path.join(p, "arrays.npz"))
     restored = load_train_state(str(tmp_path), state)
-    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -87,7 +87,7 @@ def test_checkpoint_shape_mismatch_rejected(tmp_path):
 def test_token_pipeline_determinism_and_sharding():
     a1 = list(synthetic_token_batches(1000, 4, 16, seed=3, num_batches=2))
     a2 = list(synthetic_token_batches(1000, 4, 16, seed=3, num_batches=2))
-    for (t1, y1), (t2, y2) in zip(a1, a2):
+    for (t1, y1), (t2, y2) in zip(a1, a2, strict=True):
         np.testing.assert_array_equal(t1, t2)
         assert t1.shape == (4, 16) and t1.dtype == np.int32
         assert (t1 >= 0).all() and (t1 < 1000).all()
