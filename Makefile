@@ -1,7 +1,7 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check lint analyze api-smoke bench-predict bench-serve bench-serve-smoke bench-gate
+.PHONY: test test-full docs-check lint analyze api-smoke coverage bench-predict bench-serve bench-serve-smoke bench-frontdoor bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
@@ -25,6 +25,15 @@ lint:            ## ruff over the whole repo (config in pyproject.toml)
 		echo "ruff not installed — skipping locally (CI enforces it: pip install ruff)"; \
 	fi
 
+coverage:        ## tier-1 lane under line coverage + floors on repro.api / routing core
+	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
+		$(PY) -m pytest -q --cov=repro.api --cov=repro.core.routing \
+			--cov-report=term --cov-report=json:coverage.json && \
+		$(PY) scripts/check_coverage.py coverage.json ; \
+	else \
+		echo "pytest-cov not installed — skipping locally (CI enforces the floors: pip install pytest-cov)"; \
+	fi
+
 bench-predict:   ## cached-prediction speedup report -> BENCH_predict.json
 	$(PY) -m benchmarks.bench_predict
 
@@ -34,6 +43,10 @@ bench-serve:     ## replicated-vs-sharded serving SLO report -> BENCH_serve.json
 bench-serve-smoke: ## seconds-scale serving pipeline smoke (3x3 mesh; also runs in tier-1 via the smoke marker)
 	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
 
-bench-gate:      ## bench-serve-smoke + p50 regression gate vs the checked-in baseline
+bench-frontdoor: ## async front door under open-loop Poisson arrivals -> frontdoor section of BENCH_serve.json
+	$(PY) -m benchmarks.bench_frontdoor
+
+bench-gate:      ## serve + frontdoor smoke benches + regression gates vs the checked-in baselines
 	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
+	$(PY) -m benchmarks.bench_frontdoor --smoke --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json

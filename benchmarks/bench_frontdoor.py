@@ -1,0 +1,236 @@
+"""Front-door SLO benchmark — open-loop Poisson arrivals at rising QPS.
+
+The other serving lanes (``bench_serve``) measure a single-tenant loop
+handing pre-built 2048-point batches to ``Server.submit``. This lane
+measures the ENDPOINT traffic shape: many concurrent clients, each
+asking for 1..64 points, arriving as an OPEN-LOOP Poisson process — the
+arrival schedule is fixed up front and does not slow down when the
+server falls behind, so queueing delay shows up in the tail instead of
+being hidden by a closed feedback loop.
+
+Per offered-QPS level, a fresh ``api.FrontDoor`` (continuous batching:
+``max_wait_ms`` window / ``max_rows`` trigger, bounded admission queue,
+shed-on-full) serves the whole arrival schedule and reports end-to-end
+per-request latency (p50/p95/p99, queueing included), achieved
+throughput, coalescing stats (rows and requests per device batch),
+recompiles (streaming q_max growth under load) and shed/delayed counts
+— the tail-latency-vs-offered-load curve is the deliverable.
+
+Golden gate (same property tests/test_frontdoor.py holds): at the lowest
+level, every completed request's (mean, var) must be BITWISE equal to
+serving it alone through ``Server.submit`` — coalescing is scheduling,
+never math.
+
+The record is MERGED into the bench_serve report as a ``frontdoor``
+section (BENCH_serve.json by default; a fresh file is created when the
+target does not exist), and ``check_bench_regression`` gates the lowest
+level's p95 against benchmarks/baselines/frontdoor_smoke.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_frontdoor           # merge into BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.bench_frontdoor --quick   # CI-sized
+  PYTHONPATH=src python -m benchmarks.bench_frontdoor --smoke   # seconds (the gated lane)
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _run_level(
+    api, server, *, qps: float, n_req: int, seed: int, fd_config
+) -> tuple[dict, list, list]:
+    """One offered-load level: a seeded Poisson arrival schedule of small
+    requests, all driven through one fresh FrontDoor."""
+    rng = np.random.default_rng(seed)
+    grid = server.fitted.grid
+    lo = np.array([grid.x_edges[0], grid.y_edges[0]])
+    hi = np.array([grid.x_edges[-1], grid.y_edges[-1]])
+    sizes = rng.integers(1, fd_config.max_request_rows + 1, n_req)
+    reqs = [rng.uniform(lo, hi, (int(s), 2)).astype(np.float32) for s in sizes]
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n_req))
+
+    async def client(fd, i):
+        await asyncio.sleep(float(arrivals[i]))
+        try:
+            return await fd.submit(reqs[i])
+        except api.RequestRejected:
+            return None
+
+    async def drive():
+        t0 = time.perf_counter()
+        async with api.FrontDoor(server, fd_config) as fd:
+            got = await asyncio.gather(*(client(fd, i) for i in range(n_req)))
+        return got, fd.report(), time.perf_counter() - t0
+
+    got, rep, wall = asyncio.run(drive())
+    r, b = rep["requests"], rep["batches"]
+    level = {
+        "offered_qps": qps,
+        "requests": n_req,
+        "completed": r["completed"],
+        "shed": r["shed"],
+        "delayed": r["delayed"],
+        "recompiles": rep["recompiles"],
+        "batches": b["count"],
+        "rows_per_batch_mean": b["rows_per_batch_mean"],
+        "requests_per_batch_mean": b["requests_per_batch_mean"],
+        **(rep["latency_ms"] or {}),
+        "achieved_qps": r["completed"] / wall if wall > 0 else 0.0,
+    }
+    return level, reqs, got
+
+
+def run(
+    *,
+    grid_side: int = 4,
+    m: int = 6,
+    n_train: int = 4000,
+    train_iters: int = 200,
+    qps_levels: tuple = (50.0, 100.0, 200.0, 400.0),
+    requests_per_level: int = 120,
+    mode: str = "sharded",
+    router: str = "two-level",
+    max_wait_ms: float = 2.0,
+    max_rows: int = 1024,
+    queue_depth: int = 256,
+    golden_checks: int = 10,
+    out_path: str = "BENCH_serve.json",
+) -> dict:
+    # virtual devices must be forced before any jax computation
+    from repro.launch import serve_sharded as ss
+
+    if mode == "sharded":
+        ss.ensure_host_devices(grid_side * grid_side)
+
+    import jax
+
+    from repro import api
+
+    print(f"# bench_frontdoor: grid={grid_side}x{grid_side} m={m} mode={mode} "
+          f"router={router} levels={list(qps_levels)} "
+          f"backend={jax.default_backend()}")
+    ds, fitted = ss.train_demo_surface(
+        seed=0, n=n_train, grid_side=grid_side, m=m, train_iters=train_iters,
+    )
+    serve_cfg = api.ServeConfig(
+        mode=mode, pipeline="pipelined", router=router, backend="ref",
+    )
+    server = api.Server(fitted, serve_cfg)
+    # warm the compile path with ONE tiny request — deliberately not a
+    # representative batch: the streaming q_max growth (and its recompiles)
+    # under rising load is part of what this lane measures
+    server.submit(np.array([[ds.x[:, 0].mean(), ds.x[:, 1].mean()]], np.float32))
+
+    fd_cfg = api.FrontDoorConfig(
+        max_wait_ms=max_wait_ms, max_rows=max_rows,
+        queue_depth=queue_depth, admission="shed",
+    )
+
+    levels = []
+    golden = None
+    for k, qps in enumerate(qps_levels):
+        level, reqs, got = _run_level(
+            api, server, qps=float(qps), n_req=requests_per_level,
+            seed=100 + k, fd_config=fd_cfg,
+        )
+        levels.append(level)
+        print(f"  qps={qps:>7.1f}: p95={level.get('p95_ms', float('nan')):8.2f} ms "
+              f"completed={level['completed']}/{level['requests']} "
+              f"shed={level['shed']} recompiles={level['recompiles']} "
+              f"rows/batch={level['rows_per_batch_mean']:.1f}")
+        if k == 0:
+            # golden gate at the lowest level: coalesced-then-demuxed ==
+            # solo Server.submit. Sharded: BITWISE (fixed-shape padded
+            # program). Replicated: float32-exact — XLA re-specializes
+            # per batch shape there (see repro.api.frontdoor docstring).
+            strict = mode == "sharded"
+            checked, ok, max_err = 0, True, 0.0
+            for q, out in zip(reqs, got):
+                if out is None or checked >= golden_checks:
+                    continue
+                ms, vs = server.submit(q)
+                if strict:
+                    ok = ok and np.array_equal(out[0], ms) \
+                        and np.array_equal(out[1], vs)
+                else:
+                    err = max(float(np.abs(out[0] - ms).max()),
+                              float(np.abs(out[1] - vs).max()))
+                    max_err = max(max_err, err)
+                    ok = ok and err <= 1e-5
+                checked += 1
+            golden = {
+                "checked": checked, "mode": mode, "ok": bool(ok),
+                "bitwise_ok": bool(ok) if strict else None,
+                "max_abs_err": None if strict else max_err,
+            }
+            if not ok:
+                raise SystemExit(
+                    "GOLDEN GATE FAILED: coalesced-then-demuxed results "
+                    "differ from solo Server.submit"
+                )
+
+    rec = {
+        "grid": f"{grid_side}x{grid_side}",
+        "m": m,
+        "mode": mode,
+        "router": router,
+        "backend": jax.default_backend(),
+        "requests_per_level": requests_per_level,
+        "serve_config": serve_cfg.to_dict(),
+        "frontdoor_config": fd_cfg.to_dict(),
+        "fit_config": fitted.config.to_dict(),
+        "levels": levels,
+        "golden": golden,
+        "qmax_policy": server.policy.stats() if server.policy else None,
+    }
+
+    # merge into the bench_serve report: the front door is one more lane of
+    # the same serving story, not a separate artifact
+    data = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    data["frontdoor"] = rec
+    print(json.dumps(rec, indent=2))
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"merged frontdoor section into {out_path}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized shapes (4x4 mesh, 3 levels)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale shapes (3x3 mesh) — the regression "
+                         "smoke lane (make bench-gate)")
+    ap.add_argument("--mode", choices=("sharded", "replicated"),
+                    default="sharded",
+                    help="serve mode behind the front door (default: sharded)")
+    ap.add_argument("--router", choices=("single", "two-level"),
+                    default="two-level",
+                    help="sharded router policy (default: two-level)")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="bench_serve report to merge the frontdoor section "
+                         "into (created if missing)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(grid_side=3, m=5, n_train=1200, train_iters=150,
+            qps_levels=(25.0, 50.0, 100.0), requests_per_level=40,
+            mode=args.mode, router=args.router, out_path=args.out)
+    elif args.quick:
+        run(grid_side=4, m=6, n_train=4000, train_iters=200,
+            qps_levels=(50.0, 100.0, 200.0), requests_per_level=60,
+            mode=args.mode, router=args.router, out_path=args.out)
+    else:
+        run(mode=args.mode, router=args.router, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,8 @@
 """Bench regression gate: compare a fresh ``bench_serve --smoke`` report
 against the checked-in baseline and FAIL on a large p50 regression.
+A ``frontdoor`` section (``bench_frontdoor --smoke``) is auto-detected
+and gated too: lowest-offered-load p95 vs its own baseline, plus the
+coalesce/demux golden flag.
 
 CI runs this after ``make bench-serve-smoke`` (``make bench-gate`` is the
 one-shot lane) so the serving pipeline's latency trajectory is enforced
@@ -27,6 +30,9 @@ import os
 import sys
 
 BASELINE = os.path.join(os.path.dirname(__file__), "baselines", "serve_smoke.json")
+FRONTDOOR_BASELINE = os.path.join(
+    os.path.dirname(__file__), "baselines", "frontdoor_smoke.json"
+)
 
 # lanes whose p50 the gate holds (path into the report, lane label)
 GATED_LANES = (
@@ -42,11 +48,89 @@ MAX_REGRESSION = 2.0  # x over baseline p50
 ABS_SLACK_MS = 5.0
 
 
-def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = False) -> int:
+def check_frontdoor(
+    rec: dict, baseline_path: str = FRONTDOOR_BASELINE, *, update: bool = False
+) -> list[str]:
+    """Gate one ``frontdoor`` report section: golden bitwise flag, plus the
+    LOWEST offered-load level's p95 vs the checked-in baseline (higher
+    levels deliberately run the endpoint into sheds and recompiles — their
+    tails measure overload behavior, not a regression signal)."""
+    failures = []
+    golden = rec.get("golden") or {}
+    if not golden.get("ok"):
+        failures.append(f"frontdoor golden gate broken: {golden}")
+    level = rec["levels"][0]
+
+    if update or not os.path.exists(baseline_path):
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        base = {
+            "p95_ms": level["p95_ms"],
+            "_source": {
+                "grid": rec["grid"], "m": rec["m"], "mode": rec["mode"],
+                "router": rec["router"], "backend": rec["backend"],
+                "offered_qps": level["offered_qps"],
+                "requests": level["requests"],
+            },
+        }
+        with open(baseline_path, "w") as f:
+            json.dump(base, f, indent=2)
+            f.write("\n")
+        print(f"wrote baseline {baseline_path}")
+        return failures
+
+    with open(baseline_path) as f:
+        base = json.load(f)
+    src = base.get("_source", {})
+    for key in ("grid", "m", "mode", "router", "backend"):
+        if key in src and rec.get(key) != src[key]:
+            failures.append(
+                f"frontdoor report {key}={rec.get(key)!r} does not match the "
+                f"baseline's {src[key]!r} — refresh with --update in the "
+                "same commit"
+            )
+    if "offered_qps" in src and level["offered_qps"] != src["offered_qps"]:
+        failures.append(
+            f"frontdoor gate level offered_qps={level['offered_qps']} != "
+            f"baseline's {src['offered_qps']} — the p95 comparison needs a "
+            "fixed offered load; refresh with --update"
+        )
+    got, ref = level["p95_ms"], base["p95_ms"]
+    ratio = got / ref
+    bad = ratio > MAX_REGRESSION and got - ref > ABS_SLACK_MS
+    status = "FAIL" if bad else "OK"
+    print(f"{status}: frontdoor p95 @ {level['offered_qps']:.0f} qps "
+          f"{got:.2f} ms vs baseline {ref:.2f} ms ({ratio:.2f}x, "
+          f"limit {MAX_REGRESSION:.1f}x + {ABS_SLACK_MS:.0f} ms slack)")
+    if bad:
+        failures.append(f"frontdoor p95 regressed {ratio:.2f}x")
+    return failures
+
+
+def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = False,
+          frontdoor_baseline: str = FRONTDOOR_BASELINE) -> int:
     with open(report_path) as f:
         rec = json.load(f)
 
+    # a frontdoor-only report (bench_frontdoor --out <fresh file>): gate
+    # just that section
+    if "replicated" not in rec:
+        if "frontdoor" not in rec:
+            print("FAIL: report has neither serve lanes nor a frontdoor section")
+            return 1
+        failures = check_frontdoor(
+            rec["frontdoor"], frontdoor_baseline, update=update
+        )
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        if not failures:
+            print("bench gate passed")
+        return 1 if failures else 0
+
     failures = []
+    if "frontdoor" in rec:
+        failures += check_frontdoor(
+            rec["frontdoor"], frontdoor_baseline, update=update
+        )
     eq = rec.get("equivalence", {})
     if not eq.get("atol_1e5_ok"):
         failures.append(f"equivalence gate broken: {eq}")
@@ -110,10 +194,12 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("report", help="fresh bench_serve --smoke JSON to gate")
     ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--frontdoor-baseline", default=FRONTDOOR_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from this report instead of gating")
     args = ap.parse_args()
-    sys.exit(check(args.report, args.baseline, update=args.update))
+    sys.exit(check(args.report, args.baseline, update=args.update,
+                   frontdoor_baseline=args.frontdoor_baseline))
 
 
 if __name__ == "__main__":

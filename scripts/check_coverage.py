@@ -1,0 +1,73 @@
+"""Coverage floor gate for the serving front door and the routing core.
+
+Reads a coverage.py JSON report (``pytest --cov ... --cov-report=json``)
+and enforces minimum line coverage over the subsystems this repo's
+serving guarantees live in:
+
+  * ``repro/api/`` — the session layer + async front door (smoke.py is
+    excluded: it is a CLI demo driver, exercised by ``make api-smoke``,
+    not a unit-testable surface);
+  * ``repro/core/routing.py`` — the host routing/scatter core whose
+    invariants the property suite sweeps.
+
+The floors are RATCHETS, not aspirations: set below current coverage so
+the gate only fires when tests are lost or a new untested surface lands.
+Raise them in the same commit that raises coverage. Sharded ``Server``
+internals run in subprocesses in the test suite (virtual devices must be
+forced before jax init), so in-process coverage understates them — the
+floors account for that.
+
+  PYTHONPATH=src python scripts/check_coverage.py coverage.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+# (path fragment, excluded suffixes, floor %)
+FLOORS = (
+    ("repro/api/", ("smoke.py",), 65.0),
+    ("repro/core/routing.py", (), 80.0),
+)
+
+
+def check(report_path: str) -> int:
+    with open(report_path) as f:
+        files = json.load(f)["files"]
+
+    failed = False
+    for fragment, excluded, floor in FLOORS:
+        statements = covered = 0
+        matched = []
+        for fname, rec in files.items():
+            path = fname.replace("\\", "/")
+            if fragment not in path:
+                continue
+            if any(path.endswith(suf) for suf in excluded):
+                continue
+            s = rec["summary"]
+            statements += s["num_statements"]
+            covered += s["covered_lines"]
+            matched.append(path)
+        if not matched:
+            print(f"FAIL: no files matched {fragment!r} in {report_path} — "
+                  "was coverage collected with --cov=repro?")
+            failed = True
+            continue
+        pct = 100.0 * covered / max(statements, 1)
+        ok = pct >= floor
+        print(f"{'OK' if ok else 'FAIL'}: {fragment} "
+              f"{pct:.1f}% line coverage ({covered}/{statements} statements, "
+              f"floor {floor:.0f}%, {len(matched)} files)")
+        failed = failed or not ok
+    return 1 if failed else 0
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        sys.exit(__doc__)
+    sys.exit(check(sys.argv[1]))
+
+
+if __name__ == "__main__":
+    main()

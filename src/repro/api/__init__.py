@@ -26,12 +26,16 @@ The CLI entry points (``launch/serve.py --gp``, ``launch/serve_sharded``,
 ``benchmarks/bench_serve``, ``examples/serve_demo.py``) are thin shims
 over this package. See docs/api.md.
 """
-from repro.api.config import FitConfig, ServeConfig, load_session
+from repro.api.config import FitConfig, FrontDoorConfig, ServeConfig, load_session
 from repro.api.fitted import FittedPSVGP, fit, peek_fit_config
+from repro.api.frontdoor import FrontDoor, RequestRejected
 from repro.api.server import Server
 
 __all__ = [
     "FitConfig",
+    "FrontDoor",
+    "FrontDoorConfig",
+    "RequestRejected",
     "ServeConfig",
     "FittedPSVGP",
     "Server",

@@ -259,6 +259,70 @@ class ServeConfig:
         return cls.from_dict(json.loads(s))
 
 
+_ADMISSIONS = ("delay", "shed")
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontDoorConfig:
+    """How the async front door (``repro.api.frontdoor``) coalesces many
+    small independent requests into device batches.
+
+    Fields:
+      max_wait_ms: batching-window time trigger — once the first request
+        of a window arrives, the batcher waits at most this long for more
+        before dispatching (the latency a lightly-loaded request pays to
+        buy coalescing under load).
+      max_rows: batching-window size trigger — dispatch as soon as the
+        coalesced window reaches this many query points, however young
+        the window is (caps the device batch, bounding q_max growth).
+      max_request_rows: largest single request admitted (points per
+        request). The front door serves MANY SMALL queries; a bulk batch
+        should go straight to ``Server.submit``.
+      queue_depth: admission-queue bound, in requests. The queue is what
+        absorbs bursts — and what fills while the device program
+        recompiles for a new q_max high-water mark.
+      admission: what happens to a request arriving at a full queue —
+        "delay" applies backpressure (the await blocks until a slot
+        frees: closed-loop clients slow down), "shed" rejects it
+        immediately (``frontdoor.RequestRejected``: open-loop traffic is
+        load-shed instead of building an unbounded backlog).
+    """
+
+    max_wait_ms: float = 2.0
+    max_rows: int = 1024
+    max_request_rows: int = 64
+    queue_depth: int = 256
+    admission: str = "delay"
+
+    def __post_init__(self) -> None:
+        _check(float(self.max_wait_ms) >= 0, f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        _check(int(self.max_rows) >= 1, f"max_rows must be >= 1, got {self.max_rows}")
+        _check(
+            1 <= int(self.max_request_rows) <= int(self.max_rows),
+            f"max_request_rows must be in [1, max_rows={self.max_rows}], "
+            f"got {self.max_request_rows}",
+        )
+        _check(int(self.queue_depth) >= 1, f"queue_depth must be >= 1, got {self.queue_depth}")
+        _check(
+            self.admission in _ADMISSIONS,
+            f"admission must be one of {_ADMISSIONS}, got {self.admission!r}",
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FrontDoorConfig":
+        return _from_dict(cls, d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FrontDoorConfig":
+        return cls.from_dict(json.loads(s))
+
+
 def load_session(path: str):
     """Read a session file: ``{"fit": {...}, "serve": {...}}``, both
     sections optional, no other keys. Returns (fit, serve) with ``None``

@@ -1,0 +1,371 @@
+"""Async front door — continuous batching for many small independent queries.
+
+Every serving number before this module came from a single-tenant
+synchronous loop handing pre-built 2048-point batches to
+``Server.submit``. The paper's in-situ setting (and the ROADMAP's
+"millions of users" north star) is the opposite traffic shape: many
+concurrent clients each asking for a handful of points. This module is
+the in-process asyncio model of that endpoint, LLM-serving style:
+
+  * clients ``await FrontDoor.submit(points)`` with tiny (1..64-point)
+    requests; each gets its own future;
+  * an admission queue bounds the backlog (``FrontDoorConfig
+    .queue_depth``): a request arriving at a full queue is DELAYED
+    (backpressure — the await blocks until a slot frees) or SHED
+    (``RequestRejected``) per ``FrontDoorConfig.admission``. The queue is
+    exactly what absorbs a burst while ``StreamingQMax`` /
+    ``TwoLevelQMax`` grow q_max and the device program recompiles —
+    recompiles are counted and surfaced in the SLO report;
+  * a batching window coalesces queued requests into ONE jit-stable
+    device batch (``routing.coalesce_requests``): dispatch triggers on
+    ``max_rows`` coalesced points or ``max_wait_ms`` after the window
+    opened, whichever first;
+  * the engine is double-buffered the way
+    ``serve_sharded.pipelined_request_loop`` is: batch t+1 is gathered
+    and routed on the host (event loop) while batch t's device sync
+    blocks in a worker thread — the event loop keeps admitting requests
+    throughout;
+  * results come back per request via the routing ``src_idx`` inverse
+    (``scatter_results`` inside ``Server.submit``) plus the ragged demux
+    (``routing.demux_results``) — per-user demux is free, as the
+    decentralized halo scheme promised.
+
+The golden property (gated in tests/test_frontdoor.py and by
+``benchmarks.bench_frontdoor``): however requests interleave, coalesce
+and demux, every request's (mean, var) equals serving it alone through
+``Server.submit``. Over the SHARDED path the equality is BITWISE: every
+batch is padded into the same fixed-shape (P, q_max) device program
+(q_max is the policy's sticky high-water mark), and every per-row
+quantity of the slots kernel depends only on that row's query point and
+the cached factors — batch composition is scheduling, never math. Over
+the replicated path XLA re-specializes ``fitted.predict`` per batch
+SHAPE, and differently-shaped programs can round a row differently by a
+few float32 ULP (measured ~1e-7 on CPU) — there the guarantee is exact
+to float32 resolution, and bitwise whenever the shapes coincide.
+
+Usage::
+
+    server = api.Server(fitted, api.ServeConfig(...))
+    async with api.FrontDoor(server, api.FrontDoorConfig(max_wait_ms=2)) as fd:
+        mean, var = await fd.submit(points)        # (n, 2) with n <= 64
+    report = fd.report()                           # SLO: latency, sheds, recompiles
+
+Works over both serve modes through ``Server.request_stages`` (replicated
+needs no mesh, so the docs snippet and the default test lane run it
+in-process; sharded needs the usual one-virtual-device-per-partition
+setup BEFORE jax initializes).
+"""
+from __future__ import annotations
+
+import asyncio
+import concurrent.futures
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.api.config import FrontDoorConfig
+from repro.api.server import Server
+from repro.core import routing
+
+_SENTINEL = object()  # queue wake-up marker posted by close()
+
+
+class RequestRejected(RuntimeError):
+    """Raised to a client whose request was shed by admission control
+    (``FrontDoorConfig.admission == "shed"`` and the queue was full)."""
+
+
+@dataclasses.dataclass
+class _Request:
+    """One admitted client request waiting in the batching queue."""
+
+    points: np.ndarray  # (n, 2) float32, validated at admission
+    n: int
+    future: asyncio.Future
+    t_arrival: float  # event-loop clock, set at admission
+
+
+@dataclasses.dataclass
+class _Batch:
+    """One dispatched (in-flight) coalesced batch."""
+
+    reqs: list[_Request]
+    sizes: np.ndarray  # (R,) rows per request, coalesce order
+    handle: Any  # whatever the submit stage returned (pending device work)
+
+
+class FrontDoor:
+    """The asyncio in-process endpoint wrapping an ``api.Server``.
+
+    Construction does not touch the server; the engine task starts lazily
+    on the first :meth:`submit` (or explicitly via ``async with``). All
+    device interaction goes through the server's
+    :meth:`~repro.api.server.Server.request_stages` triple, so the same
+    front door serves replicated and sharded, single and two-level
+    router, any kernel backend.
+    """
+
+    def __init__(self, server: Server, config: FrontDoorConfig | None = None):
+        self.server = server
+        self.config = FrontDoorConfig() if config is None else config
+        self._route, self._submit, self._collect = server.request_stages()
+        self._queue: asyncio.Queue | None = None  # created on the running loop
+        self._engine_task: asyncio.Task | None = None
+        # collect blocks on device results — one worker thread keeps those
+        # syncs off the event loop AND serializes them (jax dispatch from
+        # the loop thread may overlap a block_until_ready here; two
+        # concurrent blocking collects never happen)
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="frontdoor-collect"
+        )
+        self._closing = False
+        self._saw_sentinel = False  # close sentinel consumed mid-window
+        # SLO counters
+        self._arrived = 0
+        self._admitted = 0
+        self._completed = 0
+        self._shed = 0
+        self._delayed = 0
+        self._recompiles = 0
+        self._latency_s: list[float] = []
+        self._batch_rows: list[int] = []
+        self._batch_requests: list[int] = []
+
+    # -- client side -------------------------------------------------------
+
+    async def submit(self, points) -> tuple[np.ndarray, np.ndarray]:
+        """Answer one small request: (n, 2) points with
+        1 <= n <= ``max_request_rows`` -> (mean (n,), var (n,)).
+
+        Validation failures raise ``ValueError`` immediately (a malformed
+        request must never poison a coalesced batch). A full admission
+        queue sheds (``RequestRejected``) or delays per the config.
+        """
+        pts = np.asarray(points, np.float32)
+        if pts.ndim != 2 or pts.shape[1] != 2:
+            raise ValueError(f"request must be (n, 2) points, got shape {pts.shape}")
+        if not 1 <= pts.shape[0] <= self.config.max_request_rows:
+            raise ValueError(
+                f"request rows must be in [1, {self.config.max_request_rows}] "
+                f"(FrontDoorConfig.max_request_rows), got {pts.shape[0]} — "
+                "send bulk batches straight to Server.submit"
+            )
+        if self._closing:
+            raise RuntimeError("front door is closed")
+        self._ensure_started()
+        loop = asyncio.get_running_loop()
+        self._arrived += 1
+        if self._queue.full():
+            if self.config.admission == "shed":
+                self._shed += 1
+                raise RequestRejected(
+                    f"admission queue full ({self.config.queue_depth} requests)"
+                )
+            self._delayed += 1  # backpressure: the put below blocks
+        req = _Request(pts, int(pts.shape[0]), loop.create_future(), loop.time())
+        await self._queue.put(req)
+        self._admitted += 1
+        return await req.future
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _ensure_started(self) -> None:
+        if self._engine_task is None:
+            self._queue = asyncio.Queue(maxsize=self.config.queue_depth)
+            self._engine_task = asyncio.get_running_loop().create_task(
+                self._engine(), name="frontdoor-engine"
+            )
+
+    async def close(self) -> None:
+        """Drain the queue, finish in-flight batches, stop the engine.
+        Idempotent; the SLO report stays readable afterwards."""
+        if self._closing:
+            if self._engine_task is not None:
+                await self._engine_task
+            return
+        self._closing = True
+        if self._engine_task is not None:
+            await self._queue.put(_SENTINEL)
+            await self._engine_task
+            # a submit that raced past the closing check into the dead
+            # queue must fail loudly, not hang its client forever
+            for req in self._drain_now():
+                if not req.future.done():
+                    req.future.set_exception(RuntimeError("front door closed"))
+        self._pool.shutdown(wait=True)
+
+    async def __aenter__(self) -> "FrontDoor":
+        self._ensure_started()
+        return self
+
+    async def __aexit__(self, *exc) -> None:
+        await self.close()
+
+    # -- engine ------------------------------------------------------------
+
+    async def _engine(self) -> None:
+        """Double-buffered batching loop.
+
+        Mirrors ``pipelined_request_loop``: batch t's blocking device
+        sync runs CONCURRENTLY (a resolve task whose wait lives in the
+        worker thread) while the engine gathers + routes + dispatches
+        batch t+1 on the event loop — so the window for batch t+1 FILLS
+        during batch t's device time (that is what makes the batching
+        continuous rather than stop-and-wait). The previous resolve is
+        awaited before the next one starts: at most two batches in
+        flight, results settled in dispatch order — and a lone batch
+        resolves while the engine sleeps on an empty queue (the resolve
+        must never wait for a NEXT window that may not come).
+        """
+        pending: asyncio.Task | None = None
+        draining = False
+        while True:
+            if draining:
+                reqs = self._drain_now()
+            else:
+                reqs = await self._gather_window()
+                if reqs is None or self._saw_sentinel:
+                    # close() posted the sentinel (between windows, or
+                    # consumed mid-window): serve everything left
+                    draining = True
+                    reqs = (reqs or []) + self._drain_now()
+            if reqs:
+                batch = self._dispatch(reqs)
+                if pending is not None:
+                    await pending
+                pending = asyncio.get_running_loop().create_task(
+                    self._resolve(batch)
+                )
+            elif draining:
+                if pending is not None:
+                    await pending
+                if self._queue.empty():
+                    return
+
+    async def _gather_window(self) -> list[_Request] | None:
+        """One batching window: blocks for the first request, then keeps
+        coalescing until ``max_rows`` points are queued or ``max_wait_ms``
+        elapsed since the window opened. Returns None on the close
+        sentinel. The last admitted request may carry the window past
+        max_rows by at most ``max_request_rows - 1`` points — requests
+        are never split across batches."""
+        item = await self._queue.get()
+        if item is _SENTINEL:
+            return None
+        reqs, rows = [item], item.n
+        loop = asyncio.get_running_loop()
+        deadline = loop.time() + self.config.max_wait_ms / 1e3
+        while rows < self.config.max_rows:
+            timeout = deadline - loop.time()
+            if timeout <= 0:
+                break
+            try:
+                item = await asyncio.wait_for(self._queue.get(), timeout)
+            except (TimeoutError, asyncio.TimeoutError):
+                break
+            if item is _SENTINEL:
+                # serve what we have; the engine drains on the next turn
+                self._saw_sentinel = True
+                break
+            reqs.append(item)
+            rows += item.n
+        return reqs
+
+    def _drain_now(self) -> list[_Request]:
+        """Everything already queued, without waiting (close path)."""
+        reqs = []
+        while not self._queue.empty():
+            item = self._queue.get_nowait()
+            if item is not _SENTINEL:
+                reqs.append(item)
+        return reqs
+
+    def _policy_compiles(self) -> int:
+        pol = self.server.policy
+        return int(pol.compiles) if pol is not None else 0
+
+    def _dispatch(self, reqs: list[_Request]) -> _Batch:
+        """Coalesce + route + async-dispatch one window (host side, event
+        loop thread — the same work ``pipelined_request_loop`` overlaps
+        with the device)."""
+        pts, sizes = routing.coalesce_requests([r.points for r in reqs])
+        before = self._policy_compiles()
+        handle = self._submit(self._route(pts))
+        grew = self._policy_compiles() - before
+        if grew:  # this window burst the q_max high-water mark
+            self._recompiles += grew
+        self._batch_rows.append(int(sizes.sum()))
+        self._batch_requests.append(len(reqs))
+        return _Batch(reqs, sizes, handle)
+
+    async def _resolve(self, batch: _Batch) -> None:
+        """Block on batch's device results (worker thread), demux, and
+        settle every request future."""
+        loop = asyncio.get_running_loop()
+        try:
+            mean, var = await loop.run_in_executor(
+                self._pool, self._collect, batch.handle
+            )
+        except Exception as err:
+            for req in batch.reqs:
+                if not req.future.done():
+                    req.future.set_exception(err)
+            return
+        outs = routing.demux_results(batch.sizes, mean, var)
+        now = loop.time()
+        for req, out in zip(batch.reqs, outs, strict=True):
+            if not req.future.done():
+                req.future.set_result(out)
+            self._latency_s.append(now - req.t_arrival)
+        self._completed += len(batch.reqs)
+
+    # -- SLO report --------------------------------------------------------
+
+    def report(self) -> dict:
+        """The front door's SLO record.
+
+        Fields: ``requests`` (arrived / admitted / completed / shed /
+        delayed), ``batches`` (count, rows and requests per coalesced
+        batch), ``latency_ms`` (p50/p95/p99 END-TO-END per request:
+        admission to future resolution, queueing included — unlike the
+        per-batch service intervals of ``Server.stream``), ``recompiles``
+        (windows that burst the streaming q_max high-water mark — each
+        one recompiled the device program while the admission queue
+        absorbed, delayed, or shed the concurrent arrivals), plus the
+        policy stats and both configs.
+        """
+        lat = np.sort(np.asarray(self._latency_s, np.float64)) * 1e3
+        pct = (
+            {
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p95_ms": float(np.percentile(lat, 95)),
+                "p99_ms": float(np.percentile(lat, 99)),
+            }
+            if lat.size
+            else None
+        )
+        rows = np.asarray(self._batch_rows, np.int64)
+        per = np.asarray(self._batch_requests, np.int64)
+        pol = self.server.policy
+        return {
+            "frontdoor_config": self.config.to_dict(),
+            "serve_config": self.server.config.to_dict(),
+            "requests": {
+                "arrived": self._arrived,
+                "admitted": self._admitted,
+                "completed": self._completed,
+                "shed": self._shed,
+                "delayed": self._delayed,
+            },
+            "batches": {
+                "count": int(rows.size),
+                "rows_total": int(rows.sum()) if rows.size else 0,
+                "rows_per_batch_mean": float(rows.mean()) if rows.size else 0.0,
+                "rows_per_batch_max": int(rows.max()) if rows.size else 0,
+                "requests_per_batch_mean": float(per.mean()) if per.size else 0.0,
+            },
+            "latency_ms": pct,
+            "recompiles": self._recompiles,
+            "qmax_policy": pol.stats() if pol is not None else None,
+        }

@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.api.config import ServeConfig
 from repro.api.fitted import FittedPSVGP
+from repro.core import routing
 
 
 class Server:
@@ -123,6 +124,57 @@ class Server:
         mean, var = self.fitted.predict(queries)
         jax.block_until_ready((mean, var))
         return np.asarray(mean), np.asarray(var)
+
+    def submit_many(self, requests) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Answer many small independent requests as ONE device batch.
+
+        The coalesce seam the async front door (``repro.api.frontdoor``)
+        builds on: ``requests`` is a sequence of (n_i, 2) point arrays;
+        they are concatenated (``routing.coalesce_requests``), served
+        through the same memoized stages as :meth:`submit` — one routing
+        pass, one device dispatch — and split back per request
+        (``routing.demux_results``). Returns a list of (mean, var) numpy
+        pairs, one per request, equal to calling :meth:`submit` on each
+        request alone — BITWISE over the sharded path (the fixed-shape
+        padded device program makes per-row results independent of batch
+        composition), and exact to float32 ULP over the replicated path
+        (XLA re-specializes per batch shape). Gated in
+        tests/test_frontdoor.py.
+        """
+        pts, sizes = routing.coalesce_requests(requests)
+        mean, var = self.submit(pts)
+        return routing.demux_results(sizes, mean, var)
+
+    def request_stages(self) -> tuple[Callable, Callable, Callable]:
+        """The (route, submit, collect) stage triple of this server's
+        serving path — the pipelining seam.
+
+        Sharded mode returns the memoized ``serve_sharded
+        .make_request_stages`` stages (route = pure numpy; submit =
+        transfer + async dispatch; collect = the only sync point).
+        Replicated mode returns the same three-stage SHAPE around
+        ``fitted.predict`` so a caller that overlaps stages — the front
+        door's batching engine, ``pipelined_request_loop`` — works
+        against either mode without branching: route validates the batch,
+        submit dispatches without blocking (jax async dispatch), collect
+        blocks and materializes numpy results.
+        """
+        if self.config.mode == "sharded":
+            return self._route_stage, self._submit_stage, self._collect_stage
+        fitted = self.fitted
+
+        def route(q):
+            return np.asarray(q, np.float32)
+
+        def submit(pts):
+            self._stats["requests"] += 1
+            return fitted.predict(pts)
+
+        def collect(pending):
+            jax.block_until_ready(pending)
+            return np.asarray(pending[0]), np.asarray(pending[1])
+
+        return route, submit, collect
 
     def stream(self, batches, *, warm: bool = True, on_result: Callable | None = None) -> dict:
         """Serve a request stream through the configured loop; return the

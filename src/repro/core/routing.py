@@ -576,6 +576,66 @@ def make_halo_stacker(grid: PartitionGrid) -> Callable[[np.ndarray], np.ndarray]
     return stack
 
 
+def coalesce_requests(requests) -> tuple[np.ndarray, np.ndarray]:
+    """Concatenate many small independent query arrays into ONE batch.
+
+    The continuous-batching ingest of the async front door
+    (``repro.api.frontdoor``): each request is an (n_i, 2) point array;
+    the coalesced (N, 2) batch routes through the device program exactly
+    like a single large request, and :func:`demux_results` splits the
+    answers back per request. Because every per-row quantity of the
+    padded serving program depends only on that row's query point and
+    the cached factors (the slots kernel's row-independence contract,
+    ``kernels.ref.posterior_predict_slots_masked``), the coalesced-then-
+    demuxed results over the sharded path are BITWISE equal to serving
+    each request alone — the golden property tests/test_frontdoor.py
+    gates. (The replicated path agrees to float32 ULP: XLA specializes
+    ``predict`` per batch shape there, so tiny requests can round a last
+    bit differently inside a larger batch.)
+
+    Returns (points (N, 2) float32, sizes (R,) int64) with
+    N = sizes.sum(). Raises on an empty request list, an empty request,
+    or a non-(n, 2) shape — admission control must reject malformed
+    requests before they reach a device batch.
+    """
+    if len(requests) == 0:
+        raise ValueError("coalesce_requests needs at least one request")
+    arrs = []
+    for i, r in enumerate(requests):
+        a = np.asarray(r, np.float32)
+        if a.ndim != 2 or a.shape[1] != 2 or a.shape[0] < 1:
+            raise ValueError(
+                f"request {i} must be a non-empty (n, 2) point array, "
+                f"got shape {a.shape}"
+            )
+        arrs.append(a)
+    sizes = np.asarray([a.shape[0] for a in arrs], np.int64)
+    return np.concatenate(arrs, axis=0), sizes
+
+
+def demux_results(sizes: np.ndarray, *arrays: np.ndarray) -> list[tuple]:
+    """Split coalesced per-point results back into per-request tuples.
+
+    Exact inverse of the concatenation order of
+    :func:`coalesce_requests`: ``arrays`` are (N, ...) results for the
+    coalesced batch (typically mean and var, each (N,)), and the return
+    value is a list of R tuples, tuple i holding each array's
+    ``sizes[i]``-row slice for request i. Slices are copies — a demuxed
+    result must stay valid after the batch buffer is reused.
+    """
+    sizes = np.asarray(sizes)
+    offsets = np.cumsum(sizes)[:-1]
+    per_array = []
+    for a in arrays:
+        a = np.asarray(a)
+        if a.shape[0] != int(sizes.sum()):
+            raise ValueError(
+                f"result rows {a.shape[0]} != coalesced rows {int(sizes.sum())}"
+            )
+        per_array.append([s.copy() for s in np.split(a, offsets)])
+    return list(zip(*per_array, strict=True))
+
+
 @contract(
     args={"values": "(P, Q)"},
     returns="(N,)",

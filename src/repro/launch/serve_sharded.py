@@ -441,6 +441,29 @@ def make_request_stages(
     return route, submit, collect
 
 
+def as_batch_source(batches):
+    """Normalize a batch SOURCE into an iterator of query batches.
+
+    The pipelined loop used to demand a pre-built list — fine for
+    benchmarks, useless for an endpoint whose batches are formed by live
+    coalescing. Accepted shapes:
+
+      * a sequence (list/tuple) — the original contract, replayed as-is;
+      * an iterator/generator — consumed once (a live batcher can yield
+        batches as its admission window closes);
+      * a zero-arg callable — polled per batch; returning None ends the
+        stream (the pull-model injection seam: the loop asks for the next
+        batch exactly when it has host time to route it).
+    """
+    if callable(batches):
+        def pull():
+            while (b := batches()) is not None:
+                yield b
+
+        return pull()
+    return iter(batches)
+
+
 def pipelined_request_loop(
     route: Callable,
     submit: Callable,
@@ -458,6 +481,15 @@ def pipelined_request_loop(
     ``collect``, when the result is consumed. Results are bitwise
     identical to the serial loop — scheduling never touches the math.
 
+    ``batches`` is any :func:`as_batch_source` shape — a pre-built
+    sequence (the benchmark lanes), or an INJECTABLE source (iterator /
+    generator / zero-arg callable) whose batches may be formed while the
+    loop runs; the next batch is pulled exactly at the overlap point,
+    while the mesh evaluates the current one. ``warm=True`` needs a
+    replayable first batch: it runs the stream's first batch once for
+    compile+transfer warmup and then serves it again as batch 0 (the
+    sequence semantics the benchmarks rely on).
+
     Per-request latency is the request's completion-to-completion SERVICE
     interval: the wall time the pipeline spends on it once it reaches the
     head of the queue (dispatch + device evaluation + result scatter).
@@ -472,22 +504,34 @@ def pipelined_request_loop(
 
     Returns ({p50_ms, p95_ms, p99_ms}, points_per_s).
     """
+    src = as_batch_source(batches)
+    try:
+        first = next(src)
+    except StopIteration:
+        raise ValueError("pipelined_request_loop needs a non-empty batch source") from None
     if warm:
-        collect(submit(route(batches[0])))
+        collect(submit(route(first)))
     lat = []
+    points = 0
     t_all = time.time()
-    nxt = route(batches[0])
+    nxt, nxt_points = route(first), len(first)
     mark = time.time()  # pipeline idle: batch 0's service starts here
-    for i in range(len(batches)):
+    i = 0
+    while nxt is not None:
         pending = submit(nxt)  # transfer + async dispatch: mesh starts batch i
-        if i + 1 < len(batches):
-            nxt = route(batches[i + 1])  # host routes i+1 under batch i
+        points += nxt_points
+        b = next(src, None)
+        if b is not None:
+            nxt, nxt_points = route(b), len(b)  # host routes i+1 under batch i
+        else:
+            nxt = None
         out = collect(pending)  # sync point: batch i consumed
         if on_result is not None:
             on_result(i, out)
         now = time.time()
         lat.append(now - mark)
         mark = now
+        i += 1
     wall = time.time() - t_all
     ms = np.sort(np.asarray(lat)) * 1e3
     pct = {
@@ -495,7 +539,7 @@ def pipelined_request_loop(
         "p95_ms": float(np.percentile(ms, 95)),
         "p99_ms": float(np.percentile(ms, 99)),
     }
-    return pct, sum(len(q) for q in batches) / wall
+    return pct, points / wall
 
 
 def load_or_train(args, *, ensure_devices: bool = False, fit_cfg=None):

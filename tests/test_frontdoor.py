@@ -1,0 +1,277 @@
+"""The async front door (repro.api.frontdoor): golden bitwise property,
+admission control, and batching behavior.
+
+The golden property — however concurrent requests interleave, coalesce
+into device batches, and demux, every request's (mean, var) equals
+serving it alone through ``Server.submit`` — is gated here at BITWISE
+strictness wherever the serving program is shape-stable: the sharded
+mesh path (fixed (P, q_max) padded blocks; under the smoke marker,
+across both router policies) and any same-shape replicated comparison.
+Replicated cross-shape comparisons are gated at float32 resolution
+instead: XLA re-specializes ``fitted.predict`` per batch shape, and a
+tiny request inside a large batch can round a last bit differently than
+alone (measured ~1e-7 ULP noise on CPU — see the frontdoor module
+docstring). The determinism does not depend on scheduling, so the
+jittered async clients are a real adversarial schedule, not a fixed
+script.
+
+Replicated tests run in-process (no mesh). The sharded test runs in a
+subprocess because virtual host devices must be forced before the jax
+backend initializes (same pattern as tests/test_api.py).
+"""
+import asyncio
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.data.spatial import e3sm_like_field
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def server():
+    """One small replicated server shared by the in-process tests."""
+    ds = e3sm_like_field(n=500, seed=0)
+    fitted = api.fit(api.FitConfig(grid=2, m=4, train_iters=60, seed=0), ds)
+    return api.Server(fitted)
+
+
+def _requests(server, n_req, seed, max_rows=64):
+    rng = np.random.default_rng(seed)
+    lo, hi = server.fitted.grid.x_edges[0], server.fitted.grid.x_edges[-1]
+    lo_y, hi_y = server.fitted.grid.y_edges[0], server.fitted.grid.y_edges[-1]
+    return [
+        rng.uniform(
+            [lo, lo_y], [hi, hi_y], (int(rng.integers(1, max_rows + 1)), 2)
+        ).astype(np.float32)
+        for _ in range(n_req)
+    ]
+
+
+def _assert_bitwise(got, solo, tag=""):
+    for i, ((mg, vg), (ms, vs)) in enumerate(zip(got, solo, strict=True)):
+        assert np.array_equal(mg, ms) and np.array_equal(vg, vs), (tag, i)
+
+
+def _assert_f32_equal(got, solo, tag=""):
+    """Replicated cross-shape gate: exact to float32 resolution (XLA
+    shape specialization allows ULP-level drift, nothing more)."""
+    for i, ((mg, vg), (ms, vs)) in enumerate(zip(got, solo, strict=True)):
+        np.testing.assert_allclose(mg, ms, atol=1e-5, rtol=1e-5,
+                                   err_msg=f"{tag} mean req {i}")
+        np.testing.assert_allclose(vg, vs, atol=1e-5, rtol=1e-5,
+                                   err_msg=f"{tag} var req {i}")
+
+
+def test_concurrent_clients_equal_solo(server):
+    """12 async clients with seeded jitter: every coalesced-then-demuxed
+    answer equals the solo ``Server.submit`` answer (float32-exact; the
+    window composition varies with scheduling, so the batch shapes do
+    too), and the report accounts for every request."""
+    reqs = _requests(server, 12, seed=1)
+    jitter = np.random.default_rng(2).uniform(0, 0.004, len(reqs))
+
+    async def client(fd, i):
+        await asyncio.sleep(float(jitter[i]))
+        return await fd.submit(reqs[i])
+
+    async def main():
+        async with api.FrontDoor(
+            server, api.FrontDoorConfig(max_wait_ms=2.0, max_rows=256)
+        ) as fd:
+            got = await asyncio.gather(*(client(fd, i) for i in range(len(reqs))))
+        return got, fd.report()
+
+    got, rep = asyncio.run(main())
+    _assert_f32_equal(got, [server.submit(q) for q in reqs])
+    r = rep["requests"]
+    assert r["arrived"] == r["admitted"] == r["completed"] == len(reqs)
+    assert r["shed"] == 0
+    assert rep["batches"]["rows_total"] == sum(len(q) for q in reqs)
+    assert rep["latency_ms"]["p95_ms"] > 0
+    assert rep["recompiles"] == 0  # replicated path has no q_max policy
+
+
+def test_submit_many_equal_solo_and_exact_demux(server):
+    """The synchronous coalesce seam under the front door: one device
+    batch, per-request answers float32-exact vs solo submits — and
+    BITWISE equal to slicing the coalesced batch's own results (demux is
+    pure bookkeeping, never arithmetic)."""
+    from repro.core import routing
+
+    reqs = _requests(server, 7, seed=3)
+    many = server.submit_many(reqs)
+    _assert_f32_equal(many, [server.submit(q) for q in reqs])
+    pts, sizes = routing.coalesce_requests(reqs)
+    mean, var = server.submit(pts)
+    off = 0
+    for (mg, vg), n in zip(many, sizes, strict=True):
+        np.testing.assert_array_equal(mg, mean[off:off + n])
+        np.testing.assert_array_equal(vg, var[off:off + n])
+        off += int(n)
+
+
+def test_requests_coalesce_into_one_batch(server):
+    """Requests queued before the engine wakes share ONE device batch —
+    the continuous-batching window actually coalesces — and the answers
+    are BITWISE the ``submit_many`` answers (identical coalesced batch,
+    identical program: same-shape determinism holds even replicated)."""
+    reqs = _requests(server, 6, seed=4, max_rows=8)
+
+    async def main():
+        async with api.FrontDoor(
+            server, api.FrontDoorConfig(max_wait_ms=20.0, max_rows=4096)
+        ) as fd:
+            got = await asyncio.gather(*(fd.submit(q) for q in reqs))
+        return got, fd.report()
+
+    got, rep = asyncio.run(main())
+    assert rep["batches"]["count"] == 1
+    assert rep["batches"]["requests_per_batch_mean"] == 6.0
+    _assert_bitwise(got, server.submit_many(reqs))
+
+
+def test_shed_admission_rejects_over_capacity(server):
+    """admission="shed": a client arriving at a full queue gets
+    ``RequestRejected`` immediately; admitted requests still complete and
+    the report counts both sides."""
+
+    async def main():
+        fd = api.FrontDoor(
+            server,
+            api.FrontDoorConfig(queue_depth=1, admission="shed", max_wait_ms=1.0),
+        )
+        reqs = _requests(server, 8, seed=5, max_rows=4)
+        got = await asyncio.gather(
+            *(fd.submit(q) for q in reqs), return_exceptions=True
+        )
+        await fd.close()
+        return got, fd.report()
+
+    got, rep = asyncio.run(main())
+    shed = [g for g in got if isinstance(g, api.RequestRejected)]
+    served = [g for g in got if not isinstance(g, BaseException)]
+    assert shed and served  # queue_depth=1 cannot hold 8 concurrent arrivals
+    assert len(shed) + len(served) == 8
+    r = rep["requests"]
+    assert r["shed"] == len(shed) and r["completed"] == len(served)
+    assert r["arrived"] == 8 and r["admitted"] == len(served)
+
+
+def test_delay_admission_backpressures_and_serves_all(server):
+    """admission="delay": a full queue blocks the client instead of
+    shedding — every request completes, the delays are counted."""
+
+    async def main():
+        async with api.FrontDoor(
+            server,
+            api.FrontDoorConfig(queue_depth=1, admission="delay", max_wait_ms=1.0),
+        ) as fd:
+            reqs = _requests(server, 6, seed=6, max_rows=4)
+            got = await asyncio.gather(*(fd.submit(q) for q in reqs))
+        return got, reqs, fd.report()
+
+    got, reqs, rep = asyncio.run(main())
+    _assert_f32_equal(got, [server.submit(q) for q in reqs])
+    r = rep["requests"]
+    assert r["completed"] == 6 and r["shed"] == 0
+    assert r["delayed"] >= 1  # depth-1 queue cannot admit 6 burst arrivals
+
+
+def test_validation_and_lifecycle(server):
+    """Malformed requests fail fast with ValueError (never reaching a
+    batch); oversized requests point the caller at Server.submit; a
+    closed front door refuses new work; close is idempotent."""
+
+    async def main():
+        fd = api.FrontDoor(server, api.FrontDoorConfig(max_request_rows=8))
+        with pytest.raises(ValueError, match=r"\(n, 2\)"):
+            await fd.submit(np.zeros((3, 3), np.float32))
+        with pytest.raises(ValueError, match="Server.submit"):
+            await fd.submit(np.zeros((9, 2), np.float32))
+        with pytest.raises(ValueError):
+            await fd.submit(np.zeros((0, 2), np.float32))
+        # one real request so the engine actually runs before closing
+        out = await fd.submit(np.array([[0.5, 0.5]], np.float32))
+        assert out[0].shape == (1,)
+        await fd.close()
+        await fd.close()  # idempotent
+        with pytest.raises(RuntimeError, match="closed"):
+            await fd.submit(np.array([[0.5, 0.5]], np.float32))
+        rep = fd.report()  # report stays readable after close
+        assert rep["requests"]["completed"] == 1
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# sharded mesh path: golden bitwise property across router policies
+# (subprocess: virtual host devices before jax init — see test_api.py)
+# ---------------------------------------------------------------------------
+
+_SHARDED_FRONTDOOR_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=9"
+    import asyncio
+
+    import numpy as np
+
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    GS, M, IT = 3, 4, 120
+    ds = e3sm_like_field(n=1000, seed=0)
+    fitted = api.fit(api.FitConfig(grid=GS, m=M, train_iters=IT, seed=0), ds)
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+
+    for router in ("single", "two-level"):
+        server = api.Server(fitted, api.ServeConfig(
+            mode="sharded", pipeline="pipelined", router=router, backend="ref"))
+        rng = np.random.default_rng(11)
+        reqs = [rng.uniform(lo, hi, (int(rng.integers(1, 65)), 2))
+                    .astype(np.float32) for _ in range(10)]
+        jitter = rng.uniform(0, 0.01, len(reqs))
+
+        async def client(fd, i):
+            await asyncio.sleep(float(jitter[i]))
+            return await fd.submit(reqs[i])
+
+        async def main():
+            async with api.FrontDoor(
+                server, api.FrontDoorConfig(max_wait_ms=3.0, max_rows=256)
+            ) as fd:
+                got = await asyncio.gather(
+                    *(client(fd, i) for i in range(len(reqs))))
+            return got, fd.report()
+
+        got, rep = asyncio.run(main())
+        # the streaming policy grew q_max at least once under the stream,
+        # i.e. the device program recompiled while the queue absorbed load
+        assert rep["recompiles"] >= 1, rep["recompiles"]
+        assert rep["requests"]["completed"] == len(reqs)
+        for i, ((mg, vg), q) in enumerate(zip(got, reqs)):
+            ms, vs = server.submit(q)
+            assert np.array_equal(mg, ms) and np.array_equal(vg, vs), (router, i)
+        print(f"golden: frontdoor bitwise == solo submit ({router})")
+    print("SHARDED-FRONTDOOR-OK")
+    """
+)
+
+
+@pytest.mark.smoke
+def test_sharded_frontdoor_golden_across_routers():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_FRONTDOOR_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=570,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "SHARDED-FRONTDOOR-OK" in r.stdout

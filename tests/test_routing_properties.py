@@ -1,0 +1,220 @@
+"""Property-based sweep of the routing/serving host core (pure numpy).
+
+The example-based suite (tests/test_routing.py) pins specific grids and
+clouds; this file sweeps randomized (grid, cloud, skew) instances over the
+invariants the serving path stands on:
+
+  * route -> scatter is an EXACT inverse: any per-row function evaluated on
+    the padded blocks comes back bitwise in request order;
+  * two-level spill rows are only ever re-hosted on a corner cell of their
+    own blend window (the device slot encoding is valid iff this holds);
+  * ``min_spill_q_max`` always names a feasible budget;
+  * coalesce -> demux is an exact inverse of request concatenation (the
+    front door's ingest/egress pair, ``repro.api.frontdoor``).
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+``tests/_hypothesis_shim`` sweep (same properties, fixed PRNG, no
+shrinking).
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    from _hypothesis_shim import given, settings, st
+
+from repro.core import routing
+from repro.core.blend import corner_ids_weights
+from repro.core.partition import make_grid
+
+_LO = np.array([-2.0, 1.0])
+_HI = np.array([3.0, 4.5])
+
+
+def _instance(seed, n, gx, gy, skew):
+    """One randomized routing instance: a grid over a uniform cloud, with a
+    ``skew`` fraction of the points piled into one random hot cell."""
+    rng = np.random.default_rng(seed)
+    pts = rng.uniform(_LO, _HI, size=(n, 2)).astype(np.float32)
+    grid = make_grid(pts, gx, gy)
+    k = int(skew * n)
+    if k:
+        cell = rng.integers(0, gx * gy)
+        cx, cy = cell % gx, cell // gx
+        lo = np.array([grid.x_edges[cx], grid.y_edges[cy]])
+        hi = np.array([grid.x_edges[cx + 1], grid.y_edges[cy + 1]])
+        # interior of the hot cell (strictly inside: ownership unambiguous)
+        pts[:k] = rng.uniform(lo + 1e-4, hi - 1e-4, size=(k, 2)).astype(np.float32)
+    return grid, pts
+
+
+def _row_fn(xy):
+    """A per-row probe function — float32 in, float32 out, so evaluating it
+    on the padded blocks vs on the raw batch is the SAME computation and
+    the inverse check below can demand bitwise equality."""
+    return np.float32(7) * xy[..., 0] + np.float32(3) * xy[..., 1]
+
+
+def _assert_scatter_inverts(grid, pts, table):
+    n = len(pts)
+    valid = table.qmask > 0
+    assert int(valid.sum()) == n  # every query exactly once, no drops
+    # every valid padded row holds its source point verbatim
+    np.testing.assert_array_equal(table.xq[valid], pts[table.src_idx[valid]])
+    # per-row results come home bitwise in request order
+    got = routing.scatter_results(table, _row_fn(table.xq))
+    np.testing.assert_array_equal(got, _row_fn(pts))
+    # blocks respect the padded budget
+    assert int(table.counts.max()) <= table.q_max
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 400),
+    gx=st.integers(1, 6),
+    gy=st.integers(1, 5),
+    skew=st.floats(0.0, 0.9),
+)
+def test_scatter_inverts_single_level_routing(seed, n, gx, gy, skew):
+    """Default (single-level) routing: scatter is an exact inverse for any
+    grid shape, batch size, and hot-cell skew."""
+    grid, pts = _instance(seed, n, gx, gy, skew)
+    table = routing.build_routing_table(grid, pts)
+    _assert_scatter_inverts(grid, pts, table)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(8, 400),
+    gx=st.integers(2, 6),
+    gy=st.integers(2, 5),
+    skew=st.floats(0.3, 0.95),
+)
+def test_two_level_scatter_inverts_and_spills_on_corners(seed, n, gx, gy, skew):
+    """Two-level routing at the minimum feasible budget: scatter still
+    inverts exactly, and every spilled row is hosted on one of its OWN
+    blend-window corner cells (never an arbitrary neighbor)."""
+    grid, pts = _instance(seed, n, gx, gy, skew)
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, _ = corner_ids_weights(grid, pts)
+    qm = routing.min_spill_q_max(own, ids, grid.num_partitions)
+    table = routing.build_routing_table(grid, pts, q_max=qm, spill=True)
+    _assert_scatter_inverts(grid, pts, table)
+
+    valid = table.qmask > 0
+    host = np.broadcast_to(
+        np.arange(grid.num_partitions, dtype=np.int64)[:, None], valid.shape
+    )
+    src = table.src_idx[valid]
+    # host cell is always one of the query's 4 corner cells...
+    assert (host[valid][:, None] == ids[src]).any(axis=1).all()
+    # ...and the spill mask is exactly the host != owner rows
+    np.testing.assert_array_equal(
+        table.spill_mask()[valid], host[valid] != own[src]
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 300),
+    gx=st.integers(1, 6),
+    gy=st.integers(1, 5),
+    skew=st.floats(0.0, 0.95),
+)
+def test_min_spill_q_max_is_feasible_and_bounded(seed, n, gx, gy, skew):
+    """``min_spill_q_max`` returns a budget the greedy assignment actually
+    routes at (occupancy within budget), never worse than the single-level
+    answer and never below the row-coverage floor."""
+    grid, pts = _instance(seed, n, gx, gy, skew)
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, _ = corner_ids_weights(grid, pts)
+    P = grid.num_partitions
+    qm = routing.min_spill_q_max(own, ids, P)
+
+    single = int(np.bincount(own, minlength=P).max())
+    assert -(-n // P) <= qm <= single
+    host = routing.spill_assign(own, ids, qm, P)
+    assert host is not None
+    assert int(np.bincount(host, minlength=P).max()) <= qm
+
+
+def test_two_level_domain_corner_hot_cell():
+    """Degenerate corner windows: a hot cell at the DOMAIN corner has
+    queries whose 4 blend corners collapse toward fewer distinct cells, so
+    spill capacity is scarcest there. The budget floor must still route,
+    and immovable (candidate-less) queries must stay primary."""
+    rng = np.random.default_rng(7)
+    pts = rng.uniform(_LO, _HI, size=(120, 2)).astype(np.float32)
+    grid = make_grid(pts, 3, 3)
+    # pile 100 of 120 points into the domain-corner cell (0, 0)
+    lo = np.array([grid.x_edges[0], grid.y_edges[0]])
+    hi = np.array([grid.x_edges[1], grid.y_edges[1]])
+    pts[:100] = rng.uniform(lo + 1e-4, hi - 1e-4, size=(100, 2)).astype(np.float32)
+
+    ix, iy = routing.owning_cells(grid, pts)
+    own = iy * grid.gx + ix
+    ids, _ = corner_ids_weights(grid, pts)
+    qm = routing.min_spill_q_max(own, ids, grid.num_partitions)
+    assert qm < int(np.bincount(own, minlength=grid.num_partitions).max())
+
+    table = routing.build_routing_table(grid, pts, q_max=qm, spill=True)
+    _assert_scatter_inverts(grid, pts, table)
+    assert table.num_spilled() > 0
+    # spilled rows sit on corner cells of the hot cell's 2x2 windows only
+    valid = table.qmask > 0
+    host = np.broadcast_to(
+        np.arange(grid.num_partitions, dtype=np.int64)[:, None], valid.shape
+    )
+    spilled_hosts = np.unique(host[valid & table.spill_mask()])
+    assert set(spilled_hosts.tolist()) <= {1, 3, 4}  # neighbors of cell 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), r=st.integers(1, 24))
+def test_coalesce_demux_round_trip(seed, r):
+    """coalesce -> demux is the exact inverse of request concatenation, for
+    any request-count/size mix and for extra per-point result arrays of
+    any trailing shape."""
+    rng = np.random.default_rng(seed)
+    reqs = [
+        rng.uniform(_LO, _HI, size=(int(rng.integers(1, 65)), 2)).astype(np.float32)
+        for _ in range(r)
+    ]
+    pts, sizes = routing.coalesce_requests(reqs)
+    assert pts.shape == (int(sizes.sum()), 2) and len(sizes) == r
+
+    mean = rng.standard_normal(len(pts)).astype(np.float32)
+    cov3 = rng.standard_normal((len(pts), 3))
+    outs = routing.demux_results(sizes, mean, cov3)
+    assert len(outs) == r
+    off = 0
+    for req, (m_i, c_i) in zip(reqs, outs, strict=True):
+        n_i = len(req)
+        np.testing.assert_array_equal(pts[off:off + n_i], req)
+        np.testing.assert_array_equal(m_i, mean[off:off + n_i])
+        np.testing.assert_array_equal(c_i, cov3[off:off + n_i])
+        off += n_i
+    # demuxed slices are copies: mutating the batch buffer must not alias
+    mean[:] = 0
+    assert not np.array_equal(outs[0][0], mean[: len(reqs[0])]) or reqs[0].shape[0] == 0
+
+
+def test_coalesce_rejects_malformed_requests():
+    """Admission-side validation: empty list, empty request, and wrong
+    trailing dim are errors — a malformed request must never reach a
+    coalesced device batch."""
+    with pytest.raises(ValueError, match="at least one"):
+        routing.coalesce_requests([])
+    with pytest.raises(ValueError, match="request 1"):
+        routing.coalesce_requests([np.zeros((3, 2)), np.zeros((0, 2))])
+    with pytest.raises(ValueError, match="request 0"):
+        routing.coalesce_requests([np.zeros((3, 3))])
+    with pytest.raises(ValueError, match="rows"):
+        routing.demux_results(np.array([2, 2]), np.zeros(3))
