@@ -1,12 +1,15 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-full docs-check lint analyze api-smoke coverage bench-predict bench-serve bench-serve-smoke bench-frontdoor bench-gate
+.PHONY: test test-asyncio-debug test-full docs-check lint analyze api-smoke coverage bench-predict bench-serve bench-serve-smoke bench-frontdoor bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
 
-analyze:         ## static verification: HLO invariants, repo AST rules, trace-time contracts -> ANALYSIS.json
+test-asyncio-debug: ## front door under asyncio debug: any >=100ms event-loop callback is a FAILURE
+	PYTHONASYNCIODEBUG=1 $(PY) -m pytest tests/test_frontdoor.py -q
+
+analyze:         ## static verification: HLO invariants, AST rules, contracts, cost gates, async race lint -> ANALYSIS.json
 	$(PY) -m repro.analysis
 
 api-smoke:       ## fit a toy model, save, serve the loaded artifact (replicated + sharded)
@@ -25,9 +28,10 @@ lint:            ## ruff over the whole repo (config in pyproject.toml)
 		echo "ruff not installed — skipping locally (CI enforces it: pip install ruff)"; \
 	fi
 
-coverage:        ## tier-1 lane under line coverage + floors on repro.api / routing core
+coverage:        ## tier-1 lane under line coverage + floors on repro.api / routing core / analysis passes
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
 		$(PY) -m pytest -q --cov=repro.api --cov=repro.core.routing \
+			--cov=repro.analysis \
 			--cov-report=term --cov-report=json:coverage.json && \
 		$(PY) scripts/check_coverage.py coverage.json ; \
 	else \

@@ -21,6 +21,12 @@ wrong must fail the gate even if it got faster.
 Refresh the baseline (after an intentional perf change, commit the diff):
 
   PYTHONPATH=src python -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json --update
+
+COMPILED costs (flops / bytes / per-device residency) are NOT gated here:
+they are deterministic compiler facts, not wall-clock samples, so they
+live in the static analysis layer — ``--section analysis`` prints the
+pointer. Run ``python -m repro.analysis --passes costs`` (or ``make
+analyze``), baselined in ``benchmarks/baselines/analysis_costs.json``.
 """
 from __future__ import annotations
 
@@ -190,14 +196,33 @@ def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = Fal
     return 1 if failures else 0
 
 
+ANALYSIS_NOTE = """\
+compiled-cost regressions are gated STATICALLY, not by this benchmark:
+  PYTHONPATH=src python -m repro.analysis --passes costs    # or: make analyze
+diffs every AOT-compiled lane's flops / bytes-accessed / per-device
+residency against benchmarks/baselines/analysis_costs.json (exponent
+budgets + absolute ceilings + drift tolerance) with no timing noise.
+Refresh after an intentional change with --update-baselines and commit
+the JSON, exactly like --update does for the wall-clock baselines here."""
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("report", help="fresh bench_serve --smoke JSON to gate")
+    ap.add_argument("report", nargs="?",
+                    help="fresh bench_serve --smoke JSON to gate")
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--frontdoor-baseline", default=FRONTDOOR_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from this report instead of gating")
+    ap.add_argument("--section", choices=("serve", "analysis"), default="serve",
+                    help="'serve' gates the wall-clock report; 'analysis' "
+                    "points at the static compiled-cost gate")
     args = ap.parse_args()
+    if args.section == "analysis":
+        print(ANALYSIS_NOTE)
+        sys.exit(0)
+    if args.report is None:
+        ap.error("report path required for --section serve")
     sys.exit(check(args.report, args.baseline, update=args.update,
                    frontdoor_baseline=args.frontdoor_baseline))
 

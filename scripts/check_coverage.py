@@ -8,7 +8,12 @@ serving guarantees live in:
     excluded: it is a CLI demo driver, exercised by ``make api-smoke``,
     not a unit-testable surface);
   * ``repro/core/routing.py`` — the host routing/scatter core whose
-    invariants the property suite sweeps.
+    invariants the property suite sweeps;
+  * ``repro/analysis/`` — the static verification passes themselves (a
+    linter nobody tests is a linter nobody can trust). The mesh-touching
+    measurement halves (hlo lowering, cost compilation, sharded
+    contracts) run via CLI subprocesses, so in-process coverage
+    understates them — the floor is set for the pure judgment code.
 
 The floors are RATCHETS, not aspirations: set below current coverage so
 the gate only fires when tests are lost or a new untested surface lands.
@@ -28,6 +33,9 @@ import sys
 FLOORS = (
     ("repro/api/", ("smoke.py",), 65.0),
     ("repro/core/routing.py", (), 80.0),
+    # __main__.py is the CLI driver: exercised end-to-end by the
+    # subprocess tests and make analyze, invisible to in-process cov
+    ("repro/analysis/", ("__main__.py",), 75.0),
 )
 
 

@@ -19,10 +19,22 @@ source-level analysis, cheap enough to run on every push:
                          declarations on the serving entry points, checked
                          via ``jax.eval_shape`` over the config matrix —
                          zero runtime cost in production.
+  pass 4  ``costs``      compiled cost-model gates: AOT-compile the device
+                         programs at several (grid, q_max) scale points,
+                         read ``cost_analysis()``/``memory_analysis()``,
+                         fit scaling exponents and enforce the declarative
+                         budgets (``invariants.COST_BUDGETS``) plus drift
+                         vs ``benchmarks/baselines/analysis_costs.json`` —
+                         the 1/P-residency and linear-in-q_max claims,
+                         checked without running a benchmark.
+  pass 5  ``async``      CFG-lite race lint for the asyncio serving layer
+                         (``asynclint``): rules RR005..RR008 — blocking
+                         calls on the event loop, unconfined dual-thread
+                         writes, lost tasks, orphanable request futures.
 
 One front door::
 
-    PYTHONPATH=src python -m repro.analysis            # all three passes
+    PYTHONPATH=src python -m repro.analysis            # all five passes
     make analyze                                       # same, via Makefile
 
 writes ``ANALYSIS.json`` (per-lane op counts, per-rule findings) and exits
@@ -38,7 +50,7 @@ from __future__ import annotations
 
 import dataclasses
 
-PASSES = ("hlo", "ast", "contracts")
+PASSES = ("hlo", "ast", "contracts", "costs", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,8 +62,8 @@ class Finding:
     ANALYSIS.json can key on.
     """
 
-    pass_name: str  # "hlo" | "ast" | "contracts"
-    rule: str  # e.g. "RR001", "HLO-FORBIDDEN-OP", "CONTRACT-SHAPE"
+    pass_name: str  # "hlo" | "ast" | "contracts" | "costs" | "async"
+    rule: str  # e.g. "RR001", "HLO-FORBIDDEN-OP", "COST-BUDGET"
     where: str
     message: str
 

@@ -4,11 +4,12 @@
     PYTHONPATH=src python -m repro.analysis --passes ast    # source lint only
     make analyze                                            # CI entry point
 
-Runs the three passes (HLO invariant linter, repo-rule AST lint,
-trace-time contracts), prints every finding, writes ``ANALYSIS.json``
-(per-lane collective counts, per-rule tallies, findings) and exits
-non-zero iff anything was found — so CI both gates on it and can diff
-invariant drift between pushes, the way
+Runs the five passes (HLO invariant linter, repo-rule AST lint,
+trace-time contracts, compiled cost-model gates, async race lint),
+prints every finding, writes ``ANALYSIS.json`` (per-lane collective
+counts and cost records, per-rule tallies, findings) and exits non-zero
+iff anything was found — so CI both gates on it and can diff invariant
+drift between pushes, the way
 ``benchmarks/check_bench_regression.py`` gates p50.
 
 Virtual host devices are forced BEFORE anything jax-backed is imported
@@ -31,8 +32,9 @@ def build_parser() -> argparse.ArgumentParser:
     )
     ap.add_argument(
         "--passes",
-        default="hlo,ast,contracts",
-        help="comma-separated subset of hlo,ast,contracts (default: all)",
+        default="hlo,ast,contracts,costs,async",
+        help="comma-separated subset of hlo,ast,contracts,costs,async "
+        "(default: all)",
     )
     ap.add_argument(
         "--grid", type=int, default=4, help="probe grid side (devices = grid^2)"
@@ -47,6 +49,18 @@ def build_parser() -> argparse.ArgumentParser:
         default="ANALYSIS.json",
         help="JSON report path ('' to skip writing)",
     )
+    ap.add_argument(
+        "--baselines",
+        default=None,
+        help="cost-baseline JSON path (default: "
+        "benchmarks/baselines/analysis_costs.json)",
+    )
+    ap.add_argument(
+        "--update-baselines",
+        action="store_true",
+        help="rewrite the cost baseline from this run instead of gating "
+        "drift against it (commit the result)",
+    )
     return ap
 
 
@@ -60,12 +74,18 @@ def main(argv=None) -> int:
         print(f"unknown passes {sorted(unknown)}; choose from {PASSES}")
         return 2
 
-    needs_mesh = "hlo" in passes or "contracts" in passes
+    needs_mesh = bool({"hlo", "contracts", "costs"} & set(passes))
     if needs_mesh:
         # must precede any jax backend touch (see ensure_host_devices)
         from repro.launch.serve_sharded import ensure_host_devices
 
-        ensure_host_devices(args.grid * args.grid)
+        n_devices = args.grid * args.grid
+        if "costs" in passes:
+            # the cost pass sweeps its own fixed grid points
+            from repro.analysis.costs import REQUIRED_DEVICES
+
+            n_devices = max(n_devices, REQUIRED_DEVICES)
+        ensure_host_devices(n_devices)
 
     t0 = time.time()
     findings = []
@@ -95,6 +115,27 @@ def main(argv=None) -> int:
         report["passes"]["contracts"] = rep
         print(f"[contracts] {len(rep['targets_checked'])} targets, "
               f"{len(fs)} finding(s) in {rep['seconds']}s")
+    if "costs" in passes:
+        from repro.analysis import costs
+
+        kw = {"update_baselines": args.update_baselines}
+        if args.baselines is not None:
+            kw["baseline_path"] = args.baselines
+        fs, rep = costs.run(**kw)
+        findings.extend(fs)
+        report["passes"]["costs"] = rep
+        print(f"[costs]     {len(rep['programs'])} programs compiled at "
+              f"{sum(len(r['points']) for r in rep['programs'].values())} "
+              f"scale points, {len(fs)} finding(s) in {rep['seconds']}s"
+              + (" (baselines updated)" if rep["baseline_updated"] else ""))
+    if "async" in passes:
+        from repro.analysis import asynclint
+
+        fs, rep = asynclint.run(args.root)
+        findings.extend(fs)
+        report["passes"]["async"] = rep
+        print(f"[async]     {rep['files_scanned']} files, "
+              f"{len(fs)} finding(s)")
 
     report["findings"] = [f.to_dict() for f in findings]
     report["total_findings"] = len(findings)

@@ -162,3 +162,88 @@ LANES: tuple = (
         forbidden_ops=COLLECTIVE_OPS,
     ),
 ) + _sharded_lanes()
+
+
+# --------------------------------------------------------------------------
+# Compiled-cost budgets (the ``costs`` pass)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBudget:
+    """The compiled-cost envelope of one device program.
+
+    The costs pass AOT-compiles each program at several scale points,
+    reads XLA's ``cost_analysis()`` / ``memory_analysis()``, fits log-log
+    scaling exponents, and enforces:
+
+      * COST-FLOP-SUPERLINEAR — flops must be (near-)linear in the query
+        axis (``scale_axis``): fitted exponent <= ``max_flop_exponent``.
+        A pairwise/quadratic term sneaking into the blend shows up as an
+        exponent near 2 long before any benchmark feels it.
+      * COST-MEM-SCALING — compiled SPMD stats are PER DEVICE, so the
+        1/P cache-residency claim is simply "per-device argument bytes
+        and flops are FLAT as the mesh grows": fitted exponent vs the
+        device count <= ``max_device_exponent``. A replicated cache in
+        the in_specs makes per-device bytes GROW with P and is caught
+        here (sharded programs only).
+      * COST-BUDGET — absolute ceilings at the ``anchor`` scale point
+        (~2.5-3x headroom over the measured program, so real regressions
+        gate while compiler noise does not).
+
+    Stdlib-only, like the lane manifest above.
+    """
+
+    program: str  # "replicated-blend" | "sharded-blend"
+    scale_axis: str  # axis the flop exponent is fitted against
+    anchor: str  # point label the absolute ceilings apply at
+    max_flop_exponent: float
+    max_flops: float
+    max_bytes_accessed: float
+    max_arg_bytes: int
+    max_temp_bytes: int
+    max_device_exponent: float | None = None  # sharded only: vs device count
+
+    def __post_init__(self) -> None:
+        if self.program not in ("replicated-blend", "sharded-blend"):
+            raise ValueError(f"unknown program {self.program!r} in cost budget")
+        if not 1.0 <= self.max_flop_exponent < 2.0:
+            # linear is the claim; an allowance at or past quadratic
+            # would make the rule vacuous
+            raise ValueError(f"flop exponent budget must be in [1, 2) for {self.program!r}")
+        if self.max_device_exponent is not None and not 0.0 <= self.max_device_exponent < 1.0:
+            raise ValueError(f"device exponent budget must be in [0, 1) for {self.program!r}")
+        for field in ("max_flops", "max_bytes_accessed", "max_arg_bytes", "max_temp_bytes"):
+            if getattr(self, field) <= 0:
+                raise ValueError(f"{field} must be positive for {self.program!r}")
+
+
+COST_BUDGETS: dict = {
+    # jit blend over the full replicated cache; scale points sweep
+    # n_queries. ~0.6 Mflop / 1.5 MB accessed measured at n=256.
+    "replicated-blend": CostBudget(
+        program="replicated-blend",
+        scale_axis="n_queries",
+        anchor="n=256",
+        max_flop_exponent=1.3,
+        max_flops=2.0e6,
+        max_bytes_accessed=5.0e6,
+        max_arg_bytes=131072,
+        max_temp_bytes=524288,
+    ),
+    # shard_map blend, one partition per device; scale points sweep the
+    # grid side (device exponent) and q_max (flop exponent). Per-device
+    # ~0.22 Mflop / 0.27 MB accessed / 7.3 KB args measured at the
+    # (grid=4, q=64) anchor — flat across P by construction.
+    "sharded-blend": CostBudget(
+        program="sharded-blend",
+        scale_axis="q_max",
+        anchor="grid=4/q=64",
+        max_flop_exponent=1.3,
+        max_flops=7.0e5,
+        max_bytes_accessed=9.0e5,
+        max_arg_bytes=24576,
+        max_temp_bytes=262144,
+        max_device_exponent=0.3,
+    ),
+}

@@ -22,9 +22,12 @@ the in-process asyncio model of that endpoint, LLM-serving style:
     opened, whichever first;
   * the engine is double-buffered the way
     ``serve_sharded.pipelined_request_loop`` is: batch t+1 is gathered
-    and routed on the host (event loop) while batch t's device sync
-    blocks in a worker thread — the event loop keeps admitting requests
-    throughout;
+    on the event loop and routed + dispatched in a dedicated dispatch
+    thread while batch t's device sync blocks in the collect thread —
+    the event loop only ever coalesces python objects, so neither a
+    q_max recompile nor a replicated shape re-specialization (both
+    hundreds of ms) can stall admission (`tests/test_frontdoor.py`
+    asserts exactly that under ``PYTHONASYNCIODEBUG=1``);
   * results come back per request via the routing ``src_idx`` inverse
     (``scatter_results`` inside ``Server.submit``) plus the ragged demux
     (``routing.demux_results``) — per-user demux is free, as the
@@ -60,6 +63,7 @@ from __future__ import annotations
 import asyncio
 import concurrent.futures
 import dataclasses
+import threading
 from typing import Any
 
 import numpy as np
@@ -119,7 +123,19 @@ class FrontDoor:
         self._pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="frontdoor-collect"
         )
+        # route + submit also leave the event loop: a window that grows
+        # q_max (or a replicated batch with a novel coalesced shape)
+        # recompiles the device program — hundreds of ms that must not
+        # stall admission. One worker serializes dispatches so batches
+        # reach the device in window order.
+        self._dispatch_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="frontdoor-dispatch"
+        )
+        # guards the per-batch counters: written by the dispatch thread,
+        # read by report() on the event loop (see analysis RR006)
+        self._stats_lock = threading.Lock()
         self._closing = False
+        self._broken: BaseException | None = None  # engine crash, if any
         self._saw_sentinel = False  # close sentinel consumed mid-window
         # SLO counters
         self._arrived = 0
@@ -153,6 +169,8 @@ class FrontDoor:
             )
         if self._closing:
             raise RuntimeError("front door is closed")
+        if self._broken is not None:
+            raise RuntimeError("front door engine failed") from self._broken
         self._ensure_started()
         loop = asyncio.get_running_loop()
         self._arrived += 1
@@ -190,10 +208,9 @@ class FrontDoor:
             await self._engine_task
             # a submit that raced past the closing check into the dead
             # queue must fail loudly, not hang its client forever
-            for req in self._drain_now():
-                if not req.future.done():
-                    req.future.set_exception(RuntimeError("front door closed"))
+            self._fail_requests(self._drain_now(), RuntimeError("front door closed"))
         self._pool.shutdown(wait=True)
+        self._dispatch_pool.shutdown(wait=True)
 
     async def __aenter__(self) -> "FrontDoor":
         self._ensure_started()
@@ -209,39 +226,57 @@ class FrontDoor:
 
         Mirrors ``pipelined_request_loop``: batch t's blocking device
         sync runs CONCURRENTLY (a resolve task whose wait lives in the
-        worker thread) while the engine gathers + routes + dispatches
-        batch t+1 on the event loop — so the window for batch t+1 FILLS
-        during batch t's device time (that is what makes the batching
-        continuous rather than stop-and-wait). The previous resolve is
-        awaited before the next one starts: at most two batches in
-        flight, results settled in dispatch order — and a lone batch
-        resolves while the engine sleeps on an empty queue (the resolve
-        must never wait for a NEXT window that may not come).
+        collect thread) while the engine gathers batch t+1 on the event
+        loop and routes + dispatches it in the dispatch thread — so the
+        window for batch t+1 FILLS during batch t's device time (that is
+        what makes the batching continuous rather than stop-and-wait).
+        The previous resolve is awaited before the next one starts: at
+        most two batches in flight, results settled in dispatch order —
+        and a lone batch resolves while the engine sleeps on an empty
+        queue (the resolve must never wait for a NEXT window that may
+        not come).
+
+        If the engine itself dies (a routing/dispatch bug, a poisoned
+        window), a hung client is worse than an error: every future the
+        engine still owns — the window being dispatched plus everything
+        queued — is rejected, and the door refuses new submits. The
+        in-flight resolve settles its own futures (see ``_resolve``).
         """
+        loop = asyncio.get_running_loop()
         pending: asyncio.Task | None = None
         draining = False
-        while True:
-            if draining:
-                reqs = self._drain_now()
-            else:
-                reqs = await self._gather_window()
-                if reqs is None or self._saw_sentinel:
-                    # close() posted the sentinel (between windows, or
-                    # consumed mid-window): serve everything left
-                    draining = True
-                    reqs = (reqs or []) + self._drain_now()
-            if reqs:
-                batch = self._dispatch(reqs)
-                if pending is not None:
-                    await pending
-                pending = asyncio.get_running_loop().create_task(
-                    self._resolve(batch)
-                )
-            elif draining:
-                if pending is not None:
-                    await pending
-                if self._queue.empty():
-                    return
+        reqs: list[_Request] = []
+        try:
+            while True:
+                if draining:
+                    reqs = self._drain_now()
+                else:
+                    gathered = await self._gather_window()
+                    if gathered is None or self._saw_sentinel:
+                        # close() posted the sentinel (between windows, or
+                        # consumed mid-window): serve everything left
+                        draining = True
+                        reqs = (gathered or []) + self._drain_now()
+                    else:
+                        reqs = gathered
+                if reqs:
+                    batch = await loop.run_in_executor(
+                        self._dispatch_pool, self._dispatch, reqs
+                    )
+                    reqs = []  # futures now owned by the batch's resolve
+                    if pending is not None:
+                        await pending
+                    pending = loop.create_task(self._resolve(batch))
+                elif draining:
+                    if pending is not None:
+                        await pending
+                    if self._queue.empty():
+                        return
+        except Exception as err:
+            self._broken = err
+            self._fail_requests([*reqs, *self._drain_now()], err)
+            if pending is not None:
+                await pending  # the in-flight batch settles its own futures
 
     async def _gather_window(self) -> list[_Request] | None:
         """One batching window: blocks for the first request, then keeps
@@ -272,6 +307,15 @@ class FrontDoor:
             rows += item.n
         return reqs
 
+    def _fail_requests(
+        self, reqs: list[_Request], err: BaseException
+    ) -> None:
+        """Reject every unresolved future in ``reqs`` — no client may be
+        left awaiting a future nobody owns anymore."""
+        for req in reqs:
+            if not req.future.done():
+                req.future.set_exception(err)
+
     def _drain_now(self) -> list[_Request]:
         """Everything already queued, without waiting (close path)."""
         reqs = []
@@ -286,33 +330,36 @@ class FrontDoor:
         return int(pol.compiles) if pol is not None else 0
 
     def _dispatch(self, reqs: list[_Request]) -> _Batch:
-        """Coalesce + route + async-dispatch one window (host side, event
-        loop thread — the same work ``pipelined_request_loop`` overlaps
-        with the device)."""
+        """Coalesce + route + async-dispatch one window. Runs in the
+        dispatch worker thread (the same work ``pipelined_request_loop``
+        overlaps with the device) so a recompile never blocks the event
+        loop; the per-batch counters it updates are read by ``report()``
+        on the loop thread, hence the lock."""
         pts, sizes = routing.coalesce_requests([r.points for r in reqs])
         before = self._policy_compiles()
         handle = self._submit(self._route(pts))
         grew = self._policy_compiles() - before
-        if grew:  # this window burst the q_max high-water mark
-            self._recompiles += grew
-        self._batch_rows.append(int(sizes.sum()))
-        self._batch_requests.append(len(reqs))
+        with self._stats_lock:
+            if grew:  # this window burst the q_max high-water mark
+                self._recompiles += grew
+            self._batch_rows.append(int(sizes.sum()))
+            self._batch_requests.append(len(reqs))
         return _Batch(reqs, sizes, handle)
 
     async def _resolve(self, batch: _Batch) -> None:
-        """Block on batch's device results (worker thread), demux, and
-        settle every request future."""
+        """Block on batch's device results (collect thread), demux, and
+        settle every request future. ANY failure between here and
+        settlement — collect raising, a demux shape mismatch — must
+        reject the whole batch rather than orphan its futures."""
         loop = asyncio.get_running_loop()
         try:
             mean, var = await loop.run_in_executor(
                 self._pool, self._collect, batch.handle
             )
+            outs = routing.demux_results(batch.sizes, mean, var)
         except Exception as err:
-            for req in batch.reqs:
-                if not req.future.done():
-                    req.future.set_exception(err)
+            self._fail_requests(batch.reqs, err)
             return
-        outs = routing.demux_results(batch.sizes, mean, var)
         now = loop.time()
         for req, out in zip(batch.reqs, outs, strict=True):
             if not req.future.done():
@@ -335,6 +382,10 @@ class FrontDoor:
         absorbed, delayed, or shed the concurrent arrivals), plus the
         policy stats and both configs.
         """
+        with self._stats_lock:
+            rows = np.asarray(self._batch_rows, np.int64)
+            per = np.asarray(self._batch_requests, np.int64)
+            recompiles = self._recompiles
         lat = np.sort(np.asarray(self._latency_s, np.float64)) * 1e3
         pct = (
             {
@@ -345,8 +396,6 @@ class FrontDoor:
             if lat.size
             else None
         )
-        rows = np.asarray(self._batch_rows, np.int64)
-        per = np.asarray(self._batch_requests, np.int64)
         pol = self.server.policy
         return {
             "frontdoor_config": self.config.to_dict(),
@@ -366,6 +415,6 @@ class FrontDoor:
                 "requests_per_batch_mean": float(per.mean()) if per.size else 0.0,
             },
             "latency_ms": pct,
-            "recompiles": self._recompiles,
+            "recompiles": recompiles,
             "qmax_policy": pol.stats() if pol is not None else None,
         }

@@ -1,0 +1,8 @@
+"""RR005 fixture: a blocking sleep inside ``async def`` — one stalled
+callback freezes every client the loop serves."""
+import time
+
+
+async def handler():
+    time.sleep(0.5)
+    return 1

@@ -1,0 +1,19 @@
+"""RR006 fixture: the worker thread and the event loop both write
+``self.count`` — no lock, no confinement declaration."""
+import asyncio
+import concurrent.futures
+
+
+class Door:
+    def __init__(self):
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self.count = 0
+
+    def _work(self):
+        self.count += 1
+
+    async def tick(self):
+        loop = asyncio.get_running_loop()
+        done = await loop.run_in_executor(self._pool, self._work)
+        self.count += 1
+        return done

@@ -1,0 +1,13 @@
+"""RR007 fixture: the spawned task's only reference is dropped — its
+exception vanishes and the task itself may be garbage-collected."""
+import asyncio
+
+
+async def work():
+    return 3
+
+
+async def main():
+    loop = asyncio.get_running_loop()
+    loop.create_task(work())
+    await asyncio.sleep(0)

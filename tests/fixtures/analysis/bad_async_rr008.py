@@ -1,0 +1,13 @@
+"""RR008 fixture: the delivery path can raise between collect and
+``set_result`` with no rejecting handler — the batch's clients hang."""
+
+
+async def resolve(batch, collect):
+    mean, var = await collect(batch.handle)
+    outs = demux(batch.sizes, mean, var)
+    for req, out in zip(batch.reqs, outs):
+        req.future.set_result(out)
+
+
+def demux(sizes, mean, var):
+    return list(zip(mean, var))

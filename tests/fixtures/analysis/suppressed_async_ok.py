@@ -1,0 +1,15 @@
+"""Async rules suppressed in place — the ``# repro: noqa-RRxxx`` escape
+hatch works, and stripping the comments brings the findings back
+(tests/test_analysis.py proves both directions)."""
+import asyncio
+import time
+
+
+async def sleepy():
+    time.sleep(0.001)  # repro: noqa-RR005
+
+
+async def spawner():
+    loop = asyncio.get_running_loop()
+    loop.create_task(asyncio.sleep(0))  # repro: noqa-RR007
+    await asyncio.sleep(0)
