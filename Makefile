@@ -50,7 +50,8 @@ bench-serve-smoke: ## seconds-scale serving pipeline smoke (3x3 mesh; also runs 
 bench-frontdoor: ## async front door under open-loop Poisson arrivals -> frontdoor section of BENCH_serve.json
 	$(PY) -m benchmarks.bench_frontdoor
 
-bench-gate:      ## serve + frontdoor smoke benches + regression gates vs the checked-in baselines
+bench-gate:      ## serve + frontdoor + hot-swap smoke benches + regression gates vs the checked-in baselines
 	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.bench_frontdoor --smoke --out /tmp/BENCH_serve_smoke.json
+	$(PY) -m benchmarks.bench_frontdoor --smoke --swap --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json

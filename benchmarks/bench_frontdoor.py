@@ -26,9 +26,21 @@ section (BENCH_serve.json by default; a fresh file is created when the
 target does not exist), and ``check_bench_regression`` gates the lowest
 level's p95 against benchmarks/baselines/frontdoor_smoke.json.
 
+``--swap`` runs the HOT-SWAP lane instead (docs/lifecycle.md): one
+Poisson level with a ``Server.swap`` fired from a worker thread
+mid-stream — the new model's sharded cache is built and compiled while
+the old one keeps serving, then goes live as one reference flip. The
+lane records tail latency ACROSS the swap plus the swap wall-clock, and
+its golden gate is the lifecycle property itself: every completed
+answer bitwise matches exactly one of the two models, old-model answers
+never follow new-model answers in service order, and nothing is shed or
+corrupted. Merged as a ``frontdoor_swap`` section and gated against
+benchmarks/baselines/frontdoor_swap_smoke.json.
+
   PYTHONPATH=src python -m benchmarks.bench_frontdoor           # merge into BENCH_serve.json
   PYTHONPATH=src python -m benchmarks.bench_frontdoor --quick   # CI-sized
   PYTHONPATH=src python -m benchmarks.bench_frontdoor --smoke   # seconds (the gated lane)
+  PYTHONPATH=src python -m benchmarks.bench_frontdoor --smoke --swap  # hot-swap lane
 """
 from __future__ import annotations
 
@@ -203,6 +215,199 @@ def run(
     return rec
 
 
+def run_swap(
+    *,
+    grid_side: int = 4,
+    m: int = 6,
+    n_train: int = 4000,
+    train_iters: int = 200,
+    refit_iters: int = 60,
+    qps: float = 100.0,
+    n_req: int = 80,
+    router: str = "two-level",
+    max_wait_ms: float = 2.0,
+    max_rows: int = 64,
+    queue_depth: int = 256,
+    out_path: str = "BENCH_serve.json",
+) -> dict:
+    """The hot-swap lane: per-request tail latency across a mid-stream
+    ``Server.swap`` (docs/lifecycle.md).
+
+    Train model A, warm-refit model B on a drifted slice, then drive one
+    open-loop Poisson level through a FrontDoor and fire ``swap(B)`` from
+    a worker thread once a third of the requests have completed — while
+    the front door keeps admitting. The q_max high-water mark is
+    pre-warmed past anything a window can need, so ONE compiled device
+    shape serves both models; that is what makes the golden gate bitwise:
+    every completed answer must equal serving the same request alone
+    against exactly one of the two models, with the old→new transition
+    monotone in service order and zero sheds (the admission queue is
+    sized above the request count — any shed would be swap-attributable).
+    """
+    from repro.launch import serve_sharded as ss
+
+    ss.ensure_host_devices(grid_side * grid_side)
+
+    import jax
+
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    print(f"# bench_frontdoor --swap: grid={grid_side}x{grid_side} m={m} "
+          f"router={router} qps={qps} n_req={n_req} "
+          f"backend={jax.default_backend()}")
+    ds, fitted = ss.train_demo_surface(
+        seed=0, n=n_train, grid_side=grid_side, m=m, train_iters=train_iters,
+    )
+    refit_cfg = api.RefitConfig(train_iters=refit_iters)
+    new = api.refit(fitted, e3sm_like_field(n=n_train, seed=1), refit_cfg)
+
+    serve_cfg = api.ServeConfig(
+        mode="sharded", pipeline="pipelined", router=router, backend="ref",
+    )
+    server = api.Server(fitted, serve_cfg)
+    rng = np.random.default_rng(3)
+    grid = fitted.grid
+    lo = np.array([grid.x_edges[0], grid.y_edges[0]])
+    hi = np.array([grid.x_edges[-1], grid.y_edges[-1]])
+    # pre-warm the q_max high-water mark past anything a coalesced window
+    # can need: one compiled shape then serves both models, the premise of
+    # the bitwise classification below
+    server.submit(rng.uniform(lo, hi, (max_rows * 8, 2)).astype(np.float32))
+    compiles_before = server.policy.stats()["compiles"]
+
+    fd_cfg = api.FrontDoorConfig(
+        max_wait_ms=max_wait_ms, max_rows=max_rows, max_request_rows=8,
+        queue_depth=queue_depth, admission="shed",
+    )
+    sizes = rng.integers(1, fd_cfg.max_request_rows + 1, n_req)
+    reqs = [rng.uniform(lo, hi, (int(s), 2)).astype(np.float32) for s in sizes]
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n_req))
+    ref_old = [server.submit(q) for q in reqs]  # active model: A
+
+    served = []  # (request index, answer | None) in settle order
+    swap_rec = {}
+    # the tail of the schedule is held until the flip lands: the swap's
+    # off-path build (compile included) can outlast a fast Poisson stream,
+    # and the lane must always measure a POST-flip segment
+    hold = max(8, n_req // 6)
+
+    async def drive():
+        loop = asyncio.get_running_loop()
+        swap_done = asyncio.Event()
+        state = {"completed": 0}
+
+        async def client(fd, i):
+            if i >= n_req - hold:
+                await swap_done.wait()
+                await asyncio.sleep(0.002 * (i - (n_req - hold)))
+            else:
+                await asyncio.sleep(float(arrivals[i]))
+            try:
+                out = await fd.submit(reqs[i])
+            except api.RequestRejected:
+                served.append((i, None))
+                return
+            state["completed"] += 1
+            served.append((i, out))
+
+        async def swapper():
+            while state["completed"] < n_req // 6:
+                await asyncio.sleep(0.001)
+            t0 = time.perf_counter()
+            rec = await loop.run_in_executor(
+                None, lambda: server.swap(new, version="step-1")
+            )
+            swap_rec.update(rec, wall_s=time.perf_counter() - t0)
+            swap_done.set()
+
+        t0 = time.perf_counter()
+        async with api.FrontDoor(server, fd_cfg) as fd:
+            await asyncio.gather(swapper(), *(client(fd, i) for i in range(n_req)))
+        return fd.report(), time.perf_counter() - t0
+
+    rep, wall = asyncio.run(drive())
+    ref_new = [server.submit(q) for q in reqs]  # active model: B
+
+    labels = []
+    for i, out in served:
+        if out is None:
+            labels.append("shed")
+        elif np.array_equal(out[0], ref_old[i][0]) \
+                and np.array_equal(out[1], ref_old[i][1]):
+            labels.append("old")
+        elif np.array_equal(out[0], ref_new[i][0]) \
+                and np.array_equal(out[1], ref_new[i][1]):
+            labels.append("new")
+        else:
+            labels.append("corrupt")
+    answered = [lab for lab in labels if lab != "shed"]
+    monotone = "old" not in answered[answered.index("new"):] \
+        if "new" in answered else True
+    shape_stable = server.policy.stats()["compiles"] == compiles_before
+    ok = (
+        shape_stable and monotone
+        and "corrupt" not in labels and "shed" not in labels
+        and "old" in answered and "new" in answered
+    )
+    golden = {
+        "mode": "sharded", "ok": bool(ok), "bitwise_ok": "corrupt" not in labels,
+        "monotone": bool(monotone), "shape_stable": bool(shape_stable),
+        "pre_flip": answered.count("old"), "post_flip": answered.count("new"),
+        "shed": labels.count("shed"), "corrupt": labels.count("corrupt"),
+    }
+    if not ok:
+        raise SystemExit(f"SWAP GOLDEN GATE FAILED: {golden}")
+
+    r, b = rep["requests"], rep["batches"]
+    level = {
+        "offered_qps": qps,
+        "requests": n_req,
+        "completed": r["completed"],
+        "shed": r["shed"],
+        "delayed": r["delayed"],
+        "recompiles": rep["recompiles"],
+        "batches": b["count"],
+        "rows_per_batch_mean": b["rows_per_batch_mean"],
+        "requests_per_batch_mean": b["requests_per_batch_mean"],
+        **(rep["latency_ms"] or {}),
+        "achieved_qps": r["completed"] / wall if wall > 0 else 0.0,
+    }
+    print(f"  qps={qps:>7.1f}: p95={level.get('p95_ms', float('nan')):8.2f} ms "
+          f"across the swap | pre-flip={golden['pre_flip']} "
+          f"post-flip={golden['post_flip']} shed={golden['shed']} | "
+          f"swap build {swap_rec.get('build_s', float('nan')):.2f}s")
+
+    rec = {
+        "grid": f"{grid_side}x{grid_side}",
+        "m": m,
+        "mode": "sharded",
+        "router": router,
+        "backend": jax.default_backend(),
+        "requests_per_level": n_req,
+        "serve_config": serve_cfg.to_dict(),
+        "frontdoor_config": fd_cfg.to_dict(),
+        "fit_config": fitted.config.to_dict(),
+        "refit_config": refit_cfg.to_dict(),
+        "levels": [level],
+        "golden": golden,
+        "swap": {**swap_rec, "refit_s": new.refit_seconds,
+                 "lifecycle": rep["lifecycle"]},
+        "qmax_policy": server.policy.stats() if server.policy else None,
+    }
+
+    data = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    data["frontdoor_swap"] = rec
+    print(json.dumps(rec, indent=2))
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"merged frontdoor_swap section into {out_path}")
+    return rec
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -216,10 +421,29 @@ def main() -> None:
     ap.add_argument("--router", choices=("single", "two-level"),
                     default="two-level",
                     help="sharded router policy (default: two-level)")
+    ap.add_argument("--swap", action="store_true",
+                    help="run the hot-swap lane instead: tail latency across "
+                         "a mid-stream Server.swap (frontdoor_swap section)")
     ap.add_argument("--out", default="BENCH_serve.json",
                     help="bench_serve report to merge the frontdoor section "
                          "into (created if missing)")
     args = ap.parse_args()
+    if args.swap:
+        if args.mode != "sharded":
+            ap.error("--swap is the sharded lane (the replicated path is "
+                     "covered in tests/test_lifecycle.py)")
+        if args.smoke:
+            run_swap(grid_side=3, m=5, n_train=1200, train_iters=150,
+                     refit_iters=50, qps=100.0, n_req=60,
+                     router=args.router, out_path=args.out)
+        elif args.quick:
+            run_swap(grid_side=4, m=6, n_train=4000, train_iters=200,
+                     refit_iters=60, qps=100.0, n_req=80,
+                     router=args.router, out_path=args.out)
+        else:
+            run_swap(qps=150.0, n_req=150, router=args.router,
+                     out_path=args.out)
+        return
     if args.smoke:
         run(grid_side=3, m=5, n_train=1200, train_iters=150,
             qps_levels=(25.0, 50.0, 100.0), requests_per_level=40,

@@ -39,6 +39,9 @@ BASELINE = os.path.join(os.path.dirname(__file__), "baselines", "serve_smoke.jso
 FRONTDOOR_BASELINE = os.path.join(
     os.path.dirname(__file__), "baselines", "frontdoor_smoke.json"
 )
+SWAP_BASELINE = os.path.join(
+    os.path.dirname(__file__), "baselines", "frontdoor_swap_smoke.json"
+)
 
 # lanes whose p50 the gate holds (path into the report, lane label)
 GATED_LANES = (
@@ -55,16 +58,21 @@ ABS_SLACK_MS = 5.0
 
 
 def check_frontdoor(
-    rec: dict, baseline_path: str = FRONTDOOR_BASELINE, *, update: bool = False
+    rec: dict, baseline_path: str = FRONTDOOR_BASELINE, *, update: bool = False,
+    label: str = "frontdoor",
 ) -> list[str]:
-    """Gate one ``frontdoor`` report section: golden bitwise flag, plus the
-    LOWEST offered-load level's p95 vs the checked-in baseline (higher
-    levels deliberately run the endpoint into sheds and recompiles — their
-    tails measure overload behavior, not a regression signal)."""
+    """Gate one ``frontdoor``-shaped report section: golden bitwise flag,
+    plus the LOWEST offered-load level's p95 vs the checked-in baseline
+    (higher levels deliberately run the endpoint into sheds and recompiles
+    — their tails measure overload behavior, not a regression signal).
+    The ``frontdoor_swap`` section (hot-swap lane, docs/lifecycle.md) has
+    the same shape and is gated through here too — its golden flag folds
+    in the swap atomicity properties (bitwise old/new, monotone flip,
+    zero sheds), so a broken swap fails the gate even if it got faster."""
     failures = []
     golden = rec.get("golden") or {}
     if not golden.get("ok"):
-        failures.append(f"frontdoor golden gate broken: {golden}")
+        failures.append(f"{label} golden gate broken: {golden}")
     level = rec["levels"][0]
 
     if update or not os.path.exists(baseline_path):
@@ -90,13 +98,13 @@ def check_frontdoor(
     for key in ("grid", "m", "mode", "router", "backend"):
         if key in src and rec.get(key) != src[key]:
             failures.append(
-                f"frontdoor report {key}={rec.get(key)!r} does not match the "
+                f"{label} report {key}={rec.get(key)!r} does not match the "
                 f"baseline's {src[key]!r} — refresh with --update in the "
                 "same commit"
             )
     if "offered_qps" in src and level["offered_qps"] != src["offered_qps"]:
         failures.append(
-            f"frontdoor gate level offered_qps={level['offered_qps']} != "
+            f"{label} gate level offered_qps={level['offered_qps']} != "
             f"baseline's {src['offered_qps']} — the p95 comparison needs a "
             "fixed offered load; refresh with --update"
         )
@@ -104,28 +112,36 @@ def check_frontdoor(
     ratio = got / ref
     bad = ratio > MAX_REGRESSION and got - ref > ABS_SLACK_MS
     status = "FAIL" if bad else "OK"
-    print(f"{status}: frontdoor p95 @ {level['offered_qps']:.0f} qps "
+    print(f"{status}: {label} p95 @ {level['offered_qps']:.0f} qps "
           f"{got:.2f} ms vs baseline {ref:.2f} ms ({ratio:.2f}x, "
           f"limit {MAX_REGRESSION:.1f}x + {ABS_SLACK_MS:.0f} ms slack)")
     if bad:
-        failures.append(f"frontdoor p95 regressed {ratio:.2f}x")
+        failures.append(f"{label} p95 regressed {ratio:.2f}x")
     return failures
 
 
 def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = False,
-          frontdoor_baseline: str = FRONTDOOR_BASELINE) -> int:
+          frontdoor_baseline: str = FRONTDOOR_BASELINE,
+          swap_baseline: str = SWAP_BASELINE) -> int:
     with open(report_path) as f:
         rec = json.load(f)
 
     # a frontdoor-only report (bench_frontdoor --out <fresh file>): gate
-    # just that section
+    # just those sections
     if "replicated" not in rec:
-        if "frontdoor" not in rec:
+        if "frontdoor" not in rec and "frontdoor_swap" not in rec:
             print("FAIL: report has neither serve lanes nor a frontdoor section")
             return 1
-        failures = check_frontdoor(
-            rec["frontdoor"], frontdoor_baseline, update=update
-        )
+        failures = []
+        if "frontdoor" in rec:
+            failures += check_frontdoor(
+                rec["frontdoor"], frontdoor_baseline, update=update
+            )
+        if "frontdoor_swap" in rec:
+            failures += check_frontdoor(
+                rec["frontdoor_swap"], swap_baseline, update=update,
+                label="frontdoor_swap",
+            )
         for msg in failures:
             print(f"FAIL: {msg}")
         if not failures:
@@ -136,6 +152,11 @@ def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = Fal
     if "frontdoor" in rec:
         failures += check_frontdoor(
             rec["frontdoor"], frontdoor_baseline, update=update
+        )
+    if "frontdoor_swap" in rec:
+        failures += check_frontdoor(
+            rec["frontdoor_swap"], swap_baseline, update=update,
+            label="frontdoor_swap",
         )
     eq = rec.get("equivalence", {})
     if not eq.get("atol_1e5_ok"):
@@ -212,6 +233,7 @@ def main() -> None:
                     help="fresh bench_serve --smoke JSON to gate")
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--frontdoor-baseline", default=FRONTDOOR_BASELINE)
+    ap.add_argument("--swap-baseline", default=SWAP_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from this report instead of gating")
     ap.add_argument("--section", choices=("serve", "analysis"), default="serve",
@@ -224,7 +246,8 @@ def main() -> None:
     if args.report is None:
         ap.error("report path required for --section serve")
     sys.exit(check(args.report, args.baseline, update=args.update,
-                   frontdoor_baseline=args.frontdoor_baseline))
+                   frontdoor_baseline=args.frontdoor_baseline,
+                   swap_baseline=args.swap_baseline))
 
 
 if __name__ == "__main__":

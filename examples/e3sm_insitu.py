@@ -1,70 +1,112 @@
 """End-to-end in-situ driver (the paper's deployment scenario, §1/§5).
 
-Simulates a running climate model: at each SIMULATION STEP a new time
-slice of the field arrives, the PSVGP gets a fixed iteration budget (the
-paper: ~100-150 SGD iterations fit inside one ~1 s E3SM step), and the
-per-partition inducing-point summaries are CHECKPOINTED as the in-situ
-analysis product (a few KB per partition instead of the raw field).
+Simulates a running climate model with a live query endpoint attached —
+the full lifecycle from docs/lifecycle.md:
+
+  step 0   ``api.fit`` trains the partitioned surface from scratch and a
+           ``Server`` goes live on it.
+  step t   a new time slice arrives (the field drifts); ``api.refit``
+           warm-starts from step t-1's parameters under a fixed SGD
+           budget (the paper: ~100-150 iterations fit inside one ~1 s
+           E3SM step); the new model is committed to the format=2
+           artifact store (``save_step`` — a few KB per partition
+           instead of the raw field) and then ``Server.swap`` flips it
+           live with zero downtime — queries keep being answered by the
+           old model until the instant the new one is ready.
+  post hoc the store is a complete, versioned timeline: any step loads
+           back bitwise (``FittedPSVGP.load(store, step=t)``) without
+           the simulation, the jax backend warm-up, or retraining.
 
   PYTHONPATH=src python examples/e3sm_insitu.py --sim-steps 5
 """
 import argparse
-import time
 
-import jax
 import numpy as np
 
-from repro.checkpoint import save_train_state
-from repro.core import psvgp, svgp
+from repro import api
 from repro.core.metrics import boundary_rmsd, rmspe
 from repro.core.neighbors import boundary_probes
-from repro.core.partition import make_grid, partition_data
+from repro.core.partition import partition_data
 from repro.data.spatial import e3sm_like_field
 
 
+def _rmspe_on(fitted: api.FittedPSVGP, ds) -> float:
+    """Training-data RMSPE of ``fitted`` on its own slice."""
+    data = partition_data(ds.x, ds.y, fitted.grid)
+    return float(rmspe(fitted.static, fitted.state, data))
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--sim-steps", type=int, default=5)
-    ap.add_argument("--iters-per-step", type=int, default=150)
+    ap.add_argument("--iters-per-step", type=int, default=150,
+                    help="warm-refit SGD budget per simulation step")
+    ap.add_argument("--first-fit-iters", type=int, default=300,
+                    help="from-scratch budget for step 0")
     ap.add_argument("--n-obs", type=int, default=12_000)
     ap.add_argument("--grid", type=int, default=10)
+    ap.add_argument("--m", type=int, default=5)
     ap.add_argument("--delta", type=float, default=0.125)
-    ap.add_argument("--ckpt-dir", default="/tmp/psvgp_insitu")
+    ap.add_argument("--store", default="/tmp/psvgp_store",
+                    help="format=2 artifact store (one step dir per slice)")
     args = ap.parse_args()
 
-    cfg = psvgp.PSVGPConfig(
-        svgp=svgp.SVGPConfig(num_inducing=5, input_dim=2),
-        delta=args.delta, batch_size=32, learning_rate=0.02,
-    )
-    state = None
-    static = None
-    probes = None
+    # --- step 0: train from scratch, go live ----------------------------
+    ds = e3sm_like_field(n=args.n_obs, seed=100)
+    cfg = api.FitConfig(grid=args.grid, m=args.m, delta=args.delta,
+                        train_iters=args.first_fit_iters)
+    fitted = api.fit(cfg, ds, verbose=True)
+    fitted.save_step(args.store, 0, meta={"rmspe": _rmspe_on(fitted, ds)})
+    server = api.Server(fitted)
 
-    for t in range(args.sim_steps):
+    rng = np.random.default_rng(7)
+    kb = sum(int(np.prod(p.shape)) for p in
+             __import__("jax").tree.leaves(fitted.state.params)) * 4 / 1024
+    print(f"slice 0: live (summary {kb:.0f} KiB -> {args.store}/step_00000000)")
+
+    for t in range(1, args.sim_steps):
         # --- the "simulation" produces a new time slice (field drifts) ---
         ds = e3sm_like_field(n=args.n_obs, seed=100 + t)
-        grid = make_grid(ds.x, args.grid, args.grid)
-        data = partition_data(ds.x, ds.y, grid)
-        if state is None:
-            static = psvgp.build(cfg, data)
-            state = psvgp.init(jax.random.PRNGKey(0), cfg, data)
-            probes = boundary_probes(grid, probes_per_edge=8)
-        else:
-            # warm start from the previous slice's model — the in-situ loop
-            static = psvgp.build(cfg, data)
 
-        # --- in-situ budget: fixed iterations alongside the sim step ---
-        t0 = time.time()
-        state = psvgp.fit(static, state, data, args.iters_per_step)
-        jax.block_until_ready(state.params.m_star)
-        fit_s = time.time() - t0
+        # --- in-situ budget: warm refit alongside the sim step ----------
+        new = api.refit(fitted, ds,
+                        api.RefitConfig(train_iters=args.iters_per_step))
+        r = _rmspe_on(new, ds)
+        b = float(boundary_rmsd(new.static, new.state,
+                                boundary_probes(new.grid, probes_per_edge=8)))
 
-        r = float(rmspe(static, state, data))
-        b = float(boundary_rmsd(static, state, probes))
-        path = save_train_state(args.ckpt_dir, t, state)
-        kb = sum(np.prod(l.shape) for l in jax.tree.leaves(state.params)) * 4 / 1024
-        print(f"slice {t}: fit {args.iters_per_step} iters in {fit_s:.2f}s | "
-              f"RMSPE {r:.4f} | bRMSD {b:.4f} | summary {kb:.0f} KiB -> {path}")
+        # --- commit the step, then flip it live (zero downtime) ---------
+        path = new.save_step(args.store, t, meta={"refit_s": new.refit_seconds,
+                                                  "rmspe": r})
+        swap = server.swap(new, version=t)
+
+        # the endpoint answers against the JUST-SWAPPED model
+        lo = [new.grid.x_edges[0], new.grid.y_edges[0]]
+        hi = [new.grid.x_edges[-1], new.grid.y_edges[-1]]
+        probe = rng.uniform(lo, hi, (64, 2)).astype(np.float32)
+        mean, _ = server.submit(probe)
+
+        print(f"slice {t}: refit {args.iters_per_step} iters in "
+              f"{new.refit_seconds:.2f}s | RMSPE {r:.4f} | bRMSD {b:.4f} | "
+              f"swap build {swap['build_s']:.2f}s | "
+              f"probe mean {float(mean.mean()):+.3f} -> {path}")
+        fitted = new
+
+    # --- lifecycle report: who served what, and for how long ------------
+    lc = server.lifecycle()
+    print(f"lifecycle: {lc['swaps']} swaps, active version {lc['active_version']}")
+    for v in lc["versions"]:
+        refit_s = f"{v['refit_s']:.2f}s" if v["refit_s"] is not None else "  (fit)"
+        print(f"  version {v['version']}: {v['requests']} requests, "
+              f"refit {refit_s}, build {v['build_s']:.2f}s")
+
+    # --- post hoc: the store replays any step without the simulation -----
+    steps = api.peek_steps(args.store)  # pure JSON — no jax needed to ask
+    replay = api.FittedPSVGP.load(args.store, step=steps[-1])
+    again, _ = replay.predict(probe)
+    assert np.array_equal(np.asarray(again), np.asarray(mean)), \
+        "post-hoc replay must be bitwise the live answer"
+    print(f"store has steps {steps}; step {steps[-1]} replays bitwise")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,21 @@ CONFINEMENT: dict = {
         # (lock-guarded writes pass without a manifest entry).
         "FrontDoor": {},
     },
+    "repro/api/server.py": {
+        # Server.swap flips the serving generation while the front door's
+        # dispatch/collect threads are mid-stream. The design is a single
+        # atomic reference handoff, not shared mutation:
+        "Server": {
+            "_active": (
+                "written only under _swap_lock (Server.swap); readers never "
+                "lock — the request_stages trampolines snapshot the "
+                "reference EXACTLY ONCE per request (at route time) and "
+                "thread the snapshotted context through submit/collect, so "
+                "a request is served end-to-end by one model generation "
+                "and the flip is a plain atomic reference store"
+            ),
+        },
+    },
 }
 # A with-block on an attribute whose name contains this guards its body.
 LOCK_NAME_HINT = "lock"

@@ -17,6 +17,12 @@ objects instead of four flag-sprawled drivers:
     mean, var = server.submit(queries)            # one batch
     report = server.stream(batches)               # stream + SLO report
 
+and the loop form of it — the in-situ lifecycle (docs/lifecycle.md):
+
+    new = api.refit(fitted, next_slice, api.RefitConfig(train_iters=150))
+    new.save_step(store, t)                       # format=2 append-only store
+    server.swap(new, version=t)                   # zero-downtime hot swap
+
 Every serving scenario — replicated vs sharded cache, serial vs
 overlapped pipeline, single vs two-level router, jnp vs Pallas kernel
 lane, streaming vs fixed q_max — is a :class:`ServeConfig` field; both
@@ -26,8 +32,14 @@ The CLI entry points (``launch/serve.py --gp``, ``launch/serve_sharded``,
 ``benchmarks/bench_serve``, ``examples/serve_demo.py``) are thin shims
 over this package. See docs/api.md.
 """
-from repro.api.config import FitConfig, FrontDoorConfig, ServeConfig, load_session
-from repro.api.fitted import FittedPSVGP, fit, peek_fit_config
+from repro.api.config import (
+    FitConfig,
+    FrontDoorConfig,
+    RefitConfig,
+    ServeConfig,
+    load_session,
+)
+from repro.api.fitted import FittedPSVGP, fit, peek_fit_config, peek_steps, refit
 from repro.api.frontdoor import FrontDoor, RequestRejected
 from repro.api.server import Server
 
@@ -35,6 +47,7 @@ __all__ = [
     "FitConfig",
     "FrontDoor",
     "FrontDoorConfig",
+    "RefitConfig",
     "RequestRejected",
     "ServeConfig",
     "FittedPSVGP",
@@ -42,4 +55,6 @@ __all__ = [
     "fit",
     "load_session",
     "peek_fit_config",
+    "peek_steps",
+    "refit",
 ]

@@ -259,6 +259,64 @@ class ServeConfig:
         return cls.from_dict(json.loads(s))
 
 
+_INITS = ("warm", "scratch")
+
+
+@dataclasses.dataclass(frozen=True)
+class RefitConfig:
+    """How ``api.refit`` updates a fitted surface for a new simulation step.
+
+    The in-situ loop (docs/lifecycle.md) refits the SAME FitConfig recipe
+    against each new time slice, but with the previous step's parameters
+    as the initializer and a much shorter SGD budget — the paper fits
+    ~100-150 iterations inside one ~1 s E3SM step, versus the full
+    from-scratch budget at step 0.
+
+    Fields:
+      train_iters: the refit SGD budget (iterations for THIS step).
+      init: "warm" starts from the previous step's params (and Adam
+        moments); "scratch" re-initializes from ``PRNGKey(seed)`` exactly
+        like ``api.fit`` — with ``train_iters`` equal to the FitConfig's
+        full budget, the scratch path is bitwise-identical to ``fit()``
+        (gated in tests/test_lifecycle.py).
+      reset_optimizer: warm-start the params but zero the Adam moments
+        (useful when the field shifts abruptly and stale second moments
+        would damp the correction). Artifacts loaded from disk carry no
+        moments, so refitting a LOADED artifact always re-initializes
+        the optimizer regardless of this flag.
+      learning_rate: override the FitConfig learning rate for this refit
+        only (None keeps it).
+    """
+
+    train_iters: int = 50
+    init: str = "warm"
+    reset_optimizer: bool = False
+    learning_rate: float | None = None
+
+    def __post_init__(self) -> None:
+        _check(int(self.train_iters) >= 0, f"train_iters must be >= 0, got {self.train_iters}")
+        _check(self.init in _INITS, f"init must be one of {_INITS}, got {self.init!r}")
+        if self.learning_rate is not None:
+            _check(
+                float(self.learning_rate) > 0,
+                f"learning_rate must be > 0, got {self.learning_rate}",
+            )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RefitConfig":
+        return _from_dict(cls, d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RefitConfig":
+        return cls.from_dict(json.loads(s))
+
+
 _ADMISSIONS = ("delay", "shed")
 
 

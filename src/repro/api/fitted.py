@@ -28,6 +28,7 @@ direction permutations) are not persisted — resume training from a
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
@@ -37,13 +38,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.config import FitConfig
+from repro.api.config import FitConfig, RefitConfig
 from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import store as artifact_store
 from repro.core import posterior, psvgp, svgp
 from repro.core.blend import predict_blended
 from repro.core.partition import PartitionGrid, make_grid, partition_data
 from repro.gp.covariances import CovarianceParams, make_covariance
-from repro.optim import AdamState
+from repro.optim import AdamState, adam_init
 
 ARTIFACT_MANIFEST = "artifact.json"
 ARTIFACT_FORMAT = 1
@@ -95,17 +97,35 @@ def _artifact_templates(cfg: FitConfig) -> tuple[svgp.SVGPParams, posterior.Post
     return params, cache
 
 
-def peek_fit_config(path: str) -> FitConfig:
-    """Read an artifact's FitConfig WITHOUT touching jax.
+def peek_fit_config(path: str, *, step: int | None = None) -> FitConfig:
+    """Read an artifact's FitConfig WITHOUT touching the jax backend.
 
     The sharded serving path must force virtual host devices before the
     jax backend initializes, and it needs the artifact's grid side to know
     how many — this is the pure-JSON peek that makes
     ``Server.from_artifact`` / ``serve --gp-artifact`` possible.
+
+    ``path`` may be a format=1 artifact directory or a format=2 store
+    (``checkpoint.store``); for a store, ``step`` picks a committed
+    simulation step (latest when None).
     """
+    if artifact_store.is_store(path):
+        path = artifact_store.step_dir(path, step)
+    elif step is not None:
+        raise ValueError(
+            f"{path!r} is a single format-1 artifact, not a format-2 store "
+            "— it has no step index to select from"
+        )
     with open(os.path.join(path, ARTIFACT_MANIFEST)) as f:
         manifest = json.load(f)
     return FitConfig.from_dict(manifest["fit_config"])
+
+
+def peek_steps(path: str) -> list[int]:
+    """The committed step ids of a format=2 store, in ascending order —
+    pure JSON, readable before the jax backend initializes (the ops
+    dashboard's "what steps do we have" query)."""
+    return artifact_store.store_steps(path)
 
 
 class FittedPSVGP:
@@ -135,6 +155,11 @@ class FittedPSVGP:
         self.static = static
         self.state = state
         self._cache = cache
+        # lifecycle observability: wall-clock of the training (or warm
+        # refit) that produced this state — None on loaded artifacts.
+        # Server.lifecycle() surfaces it per served version.
+        self.train_seconds: float | None = None
+        self.refit_seconds: float | None = None
         # sharded-serving context (mesh, sharded cache, blend programs),
         # built and memoized by api.Server — kept here so several Server
         # views of one model (serial + pipelined lanes of a benchmark, say)
@@ -178,11 +203,56 @@ class FittedPSVGP:
         save_pytree(path, {"params": self.state.params, "cache": self.cache})
         return path
 
+    def save_step(self, store_path: str, step: int, *, meta: dict | None = None) -> str:
+        """Commit this model as simulation step ``step`` of a format=2
+        append-only store (``repro.checkpoint.store``).
+
+        Writes a FULL format=1 artifact into ``store_path/step_NNNNNNNN/``
+        (``artifact.json`` + the {params, cache} pytrees — same layout as
+        :meth:`save`), then atomically appends the step to ``store.json``
+        — the index rewrite is the commit point, so a crash mid-save
+        leaves only an unindexed orphan directory, never a half-indexed
+        step. ``meta`` (plain-JSON: refit wall-clock, fit metrics, ...)
+        rides along in the step's index entry. Steps are append-only and
+        strictly increasing. Returns the step directory.
+        """
+        dirname = artifact_store.step_dir_name(step)
+        full = os.path.join(store_path, dirname)
+        committed = (
+            artifact_store.store_steps(store_path)
+            if artifact_store.is_store(store_path)
+            else []
+        )
+        if int(step) in committed or (committed and int(step) <= max(committed)):
+            # fail BEFORE overwriting the step directory the index points at
+            raise ValueError(
+                f"step {step} cannot be committed to the store at "
+                f"{store_path!r} (committed steps: {committed}) — the store "
+                "is append-only, strictly increasing"
+            )
+        self.save(full)
+        if meta is None and self.refit_seconds is not None:
+            meta = {"refit_s": self.refit_seconds}
+        artifact_store.commit_step(store_path, step, dirname, meta)
+        return full
+
     @classmethod
-    def load(cls, path: str) -> "FittedPSVGP":
-        """Restore a serving artifact saved by :meth:`save` — no
-        retraining, no refactorization; the cached factors come back
-        bitwise and the first prediction is O(Q m^2) like any other."""
+    def load(cls, path: str, *, step: int | None = None) -> "FittedPSVGP":
+        """Restore a serving artifact — no retraining, no refactorization;
+        the cached factors come back bitwise and the first prediction is
+        O(Q m^2) like any other.
+
+        ``path`` is either a format=1 directory written by :meth:`save`
+        or a format=2 store written by :meth:`save_step`; for a store,
+        ``step`` selects a committed simulation step (latest when None).
+        """
+        if artifact_store.is_store(path):
+            path = artifact_store.step_dir(path, step)
+        elif step is not None:
+            raise ValueError(
+                f"{path!r} is a single format-1 artifact, not a format-2 "
+                "store — it has no step index to select from"
+            )
         with open(os.path.join(path, ARTIFACT_MANIFEST)) as f:
             manifest = json.load(f)
         if manifest.get("format") != ARTIFACT_FORMAT:
@@ -222,6 +292,43 @@ class FittedPSVGP:
         return cls(config, grid, static, state, cache=tree["cache"])
 
 
+def _extract_xy(data: Any) -> tuple[np.ndarray, Any]:
+    """The one data-adapter ``fit`` and ``refit`` share: an object with
+    ``.x``/``.y`` attributes or an ``(x, y)`` tuple -> validated arrays."""
+    if hasattr(data, "x") and hasattr(data, "y"):
+        x, y = data.x, data.y
+    else:
+        x, y = data
+    x = np.asarray(x, np.float32)
+    if x.ndim != 2 or x.shape[1] != INPUT_DIM:
+        raise ValueError(f"data x must be (N, {INPUT_DIM}), got {x.shape}")
+    return x, y
+
+
+def _train(
+    config: FitConfig, x: np.ndarray, y: Any, init_state: psvgp.PSVGPState | None
+) -> FittedPSVGP:
+    """The shared training recipe behind ``fit`` and ``refit``: grid from
+    the data's bounding box, padded partition storage, ``psvgp.build``,
+    then ``psvgp.fit`` for ``config.train_iters`` from either a fresh
+    ``psvgp.init(PRNGKey(config.seed))`` state (``init_state=None`` — the
+    ``fit()`` path) or the given warm state. One code path means the
+    refit-from-scratch gate (refit == fit, bitwise) holds by construction.
+    """
+    grid = make_grid(x, config.grid, config.grid)
+    pdata = partition_data(x, y, grid)
+    pcfg = _psvgp_config(config)
+    static = psvgp.build(pcfg, pdata)
+    if init_state is None:
+        init_state = psvgp.init(jax.random.PRNGKey(config.seed), pcfg, pdata)
+    t0 = time.time()
+    state = psvgp.fit(static, init_state, pdata, config.train_iters)
+    jax.block_until_ready(state.params)
+    fitted = FittedPSVGP(config, grid, static, state)
+    fitted.train_seconds = time.time() - t0
+    return fitted
+
+
 def fit(config: FitConfig, data: Any, *, verbose: bool = False) -> FittedPSVGP:
     """Train a partitioned surface: ``FitConfig`` + data -> :class:`FittedPSVGP`.
 
@@ -237,24 +344,74 @@ def fit(config: FitConfig, data: Any, *, verbose: bool = False) -> FittedPSVGP:
     ``fit`` with ``PRNGKey(config.seed)``) — a fixed seed reproduces the
     same trained state bitwise.
     """
-    if hasattr(data, "x") and hasattr(data, "y"):
-        x, y = data.x, data.y
-    else:
-        x, y = data
-    x = np.asarray(x, np.float32)
-    if x.ndim != 2 or x.shape[1] != INPUT_DIM:
-        raise ValueError(f"data x must be (N, {INPUT_DIM}), got {x.shape}")
-    grid = make_grid(x, config.grid, config.grid)
-    pdata = partition_data(x, y, grid)
-    pcfg = _psvgp_config(config)
-    static = psvgp.build(pcfg, pdata)
-    state = psvgp.init(jax.random.PRNGKey(config.seed), pcfg, pdata)
-    t0 = time.time()
-    state = psvgp.fit(static, state, pdata, config.train_iters)
-    jax.block_until_ready(state.params)
+    x, y = _extract_xy(data)
+    fitted = _train(config, x, y, None)
     if verbose:
         print(
-            f"trained P={grid.num_partitions} partitions, m={config.m}, "
-            f"{config.train_iters} iters in {time.time() - t0:.1f} s"
+            f"trained P={fitted.grid.num_partitions} partitions, m={config.m}, "
+            f"{config.train_iters} iters in {fitted.train_seconds:.1f} s"
         )
-    return FittedPSVGP(config, grid, static, state)
+    return fitted
+
+
+def refit(
+    fitted: FittedPSVGP,
+    data: Any,
+    config: RefitConfig | None = None,
+    *,
+    verbose: bool = False,
+) -> FittedPSVGP:
+    """One in-situ step: update ``fitted`` against a NEW time slice.
+
+    Args:
+      fitted: the previous step's model (from :func:`fit`, a previous
+        ``refit``, or ``FittedPSVGP.load``).
+      data: the new slice — same shapes as :func:`fit` accepts: ``.x``
+        (N, 2) / ``.y`` (N,), or an ``(x, y)`` tuple.
+      config: the :class:`~repro.api.config.RefitConfig` step recipe
+        (default ``RefitConfig()``: warm start, 50 iterations).
+
+    Returns a NEW :class:`FittedPSVGP` (the input is never mutated — the
+    old model keeps serving while this one trains; hand the result to
+    ``Server.swap`` to go live). The new model reuses ``fitted.config``
+    with ``train_iters`` (and optionally ``learning_rate``) replaced by
+    the refit budget; the partition grid and topology tables are rebuilt
+    from the new slice's bounding box.
+
+    Semantics by ``config.init``:
+      * ``"warm"`` — previous params AND Adam moments carry over (the
+        moments are re-zeroed when ``reset_optimizer`` is set, or when
+        the artifact was loaded from disk and has none); the SGD key
+        sequence continues from the carried step counter, so a refit
+        never replays step 0's mini-batches.
+      * ``"scratch"`` — re-initialize from ``PRNGKey(seed)`` and run the
+        SAME code path as :func:`fit`; with the full FitConfig budget
+        this is bitwise-identical to ``fit()`` on the new slice (gated
+        in tests/test_lifecycle.py).
+
+    ``result.refit_seconds`` records the wall-clock of the step (the
+    lifecycle SLO input; ``save_step`` persists it into the store index).
+    """
+    cfg = RefitConfig() if config is None else config
+    fit_cfg = fitted.config
+    if cfg.learning_rate is not None:
+        fit_cfg = dataclasses.replace(fit_cfg, learning_rate=cfg.learning_rate)
+    fit_cfg = dataclasses.replace(fit_cfg, train_iters=int(cfg.train_iters))
+    x, y = _extract_xy(data)
+    if cfg.init == "scratch":
+        warm = None
+    else:
+        warm = fitted.state
+        if cfg.reset_optimizer or warm.opt.mu is None:
+            # loaded artifacts persist params only — no Adam moments
+            warm = psvgp.PSVGPState(
+                params=warm.params, opt=adam_init(warm.params), step=warm.step
+            )
+    new = _train(fit_cfg, x, y, warm)
+    new.refit_seconds = new.train_seconds
+    if verbose:
+        print(
+            f"refit ({cfg.init}) P={new.grid.num_partitions} partitions, "
+            f"{fit_cfg.train_iters} iters in {new.refit_seconds:.1f} s"
+        )
+    return new

@@ -380,7 +380,11 @@ class FrontDoor:
         (windows that burst the streaming q_max high-water mark — each
         one recompiled the device program while the admission queue
         absorbed, delayed, or shed the concurrent arrivals), plus the
-        policy stats and both configs.
+        policy stats, both configs, and the server's ``lifecycle``
+        section (``Server.lifecycle``: swaps, active version, requests
+        served and refit wall-clock per model version — the front door
+        keeps admitting straight through a ``Server.swap``, and this is
+        where that shows up).
         """
         with self._stats_lock:
             rows = np.asarray(self._batch_rows, np.int64)
@@ -417,4 +421,5 @@ class FrontDoor:
             "latency_ms": pct,
             "recompiles": recompiles,
             "qmax_policy": pol.stats() if pol is not None else None,
+            "lifecycle": self.server.lifecycle(),
         }

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import load_pytree, save_pytree, latest_step, save_train_state, load_train_state
+from repro.checkpoint import store
 
-__all__ = ["save_pytree", "load_pytree", "latest_step", "save_train_state", "load_train_state"]
+__all__ = ["save_pytree", "load_pytree", "latest_step", "save_train_state", "load_train_state", "store"]
