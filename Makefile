@@ -1,7 +1,7 @@
 # Convenience lanes (the repo runs from source: PYTHONPATH=src).
 PY := PYTHONPATH=src python
 
-.PHONY: test test-asyncio-debug test-full docs-check lint analyze api-smoke coverage bench-predict bench-serve bench-serve-smoke bench-frontdoor bench-gate
+.PHONY: test test-asyncio-debug test-full docs-check lint analyze api-smoke serve-http coverage bench-predict bench-serve bench-serve-smoke bench-frontdoor bench-net bench-net-smoke bench-gate
 
 test:            ## tier-1: default lane (skips the slow marker)
 	$(PY) -m pytest -x -q
@@ -14,6 +14,9 @@ analyze:         ## static verification: HLO invariants, AST rules, contracts, c
 
 api-smoke:       ## fit a toy model, save, serve the loaded artifact (replicated + sharded)
 	$(PY) -m repro.api.smoke
+
+serve-http:      ## fit a toy model and serve it over HTTP (Ctrl-C to stop; see docs/net.md)
+	$(PY) -m repro.net.server --gp-grid 3 --gp-m 5
 
 test-full:       ## everything, including the slow SPMD/dry-run lane
 	$(PY) -m pytest -q -m "slow or not slow"
@@ -28,10 +31,10 @@ lint:            ## ruff over the whole repo (config in pyproject.toml)
 		echo "ruff not installed — skipping locally (CI enforces it: pip install ruff)"; \
 	fi
 
-coverage:        ## tier-1 lane under line coverage + floors on repro.api / routing core / analysis passes
+coverage:        ## tier-1 lane under line coverage + floors on repro.api / routing core / analysis / wire layer
 	@if $(PY) -c "import pytest_cov" >/dev/null 2>&1; then \
 		$(PY) -m pytest -q --cov=repro.api --cov=repro.core.routing \
-			--cov=repro.analysis \
+			--cov=repro.analysis --cov=repro.net \
 			--cov-report=term --cov-report=json:coverage.json && \
 		$(PY) scripts/check_coverage.py coverage.json ; \
 	else \
@@ -50,8 +53,15 @@ bench-serve-smoke: ## seconds-scale serving pipeline smoke (3x3 mesh; also runs 
 bench-frontdoor: ## async front door under open-loop Poisson arrivals -> frontdoor section of BENCH_serve.json
 	$(PY) -m benchmarks.bench_frontdoor
 
-bench-gate:      ## serve + frontdoor + hot-swap smoke benches + regression gates vs the checked-in baselines
+bench-net:       ## over-the-wire HTTP vs in-process latency + golden gate -> http section of BENCH_serve.json
+	$(PY) -m benchmarks.bench_net
+
+bench-net-smoke: ## seconds-scale over-the-wire smoke (replicated 3x3; real sockets)
+	$(PY) -m benchmarks.bench_net --smoke --out /tmp/BENCH_net_smoke.json
+
+bench-gate:      ## serve + frontdoor + hot-swap + wire smoke benches + regression gates vs the checked-in baselines
 	$(PY) -m benchmarks.bench_serve --smoke --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.bench_frontdoor --smoke --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.bench_frontdoor --smoke --swap --out /tmp/BENCH_serve_smoke.json
+	$(PY) -m benchmarks.bench_net --smoke --out /tmp/BENCH_serve_smoke.json
 	$(PY) -m benchmarks.check_bench_regression /tmp/BENCH_serve_smoke.json

@@ -1,0 +1,353 @@
+"""Wire benchmark — the front-door SLO curve measured over real sockets.
+
+``bench_frontdoor`` measures the continuous-batching endpoint in-process:
+client coroutine -> ``FrontDoor.submit`` -> future. This lane puts the
+actual transport in front of it (``repro.net``: msgpack frames over
+HTTP/1.1 on localhost TCP) and answers the ROADMAP's open question: what
+does the wire add to the tail once arrivals carry genuine network jitter?
+
+Per offered-QPS level the SAME seeded Poisson schedule (same request
+sizes, same points, same arrival offsets) is driven twice:
+
+  in-process   a fresh ``api.FrontDoor`` on the loop, exactly the
+               bench_frontdoor shape — the transport-free reference;
+  http         a fresh ``repro.net.NetServer`` (its own FrontDoor over
+               the same ``api.Server``) with a pool of persistent
+               ``AsyncNetClient`` connections driving the schedule over
+               127.0.0.1 sockets, shed-on-full like the reference
+               (429s are counted as shed, not retried).
+
+The deliverable is the WIRE-OVERHEAD column: http p50 minus in-process
+p50 at the same offered load — serialization + socket + HTTP framing,
+everything the transport adds on top of the engine. The response frames'
+server-side timing breakdown (decode/engine/total) is averaged per level
+so the overhead can be split into server-side framing vs socket transit.
+
+Golden gate (lowest level): every HTTP response payload must be BITWISE
+equal to serving the same request alone through ``Server.submit`` — over
+the sharded fixed-shape program the wire adds transport, never math (raw
+float32 bytes on the wire make serialization an exact round-trip).
+
+The record merges into BENCH_serve.json as the ``http`` section, gated
+like ``frontdoor`` by ``check_bench_regression``: golden ok + lowest
+level p95 + wire-overhead ceiling vs benchmarks/baselines/net_smoke.json
+(same 2x ratio + 5 ms absolute slack rule).
+
+  PYTHONPATH=src python -m benchmarks.bench_net           # merge into BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.bench_net --quick   # CI-sized
+  PYTHONPATH=src python -m benchmarks.bench_net --smoke   # seconds (the gated lane)
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import time
+
+import numpy as np
+
+
+def _schedule(rng, grid, *, n_req: int, max_rows: int, qps: float):
+    """One open-loop level: request point sets + Poisson arrival offsets.
+    Seeded ONCE per level and shared verbatim by the in-process and the
+    HTTP runs — the wire-overhead column only means something if both
+    runs answer the identical offered stream."""
+    lo = np.array([grid.x_edges[0], grid.y_edges[0]])
+    hi = np.array([grid.x_edges[-1], grid.y_edges[-1]])
+    sizes = rng.integers(1, max_rows + 1, n_req)
+    reqs = [rng.uniform(lo, hi, (int(s), 2)).astype(np.float32) for s in sizes]
+    arrivals = np.cumsum(rng.exponential(1.0 / qps, n_req))
+    return reqs, arrivals
+
+
+def _percentiles(lat_s: list) -> dict:
+    ms = np.sort(np.asarray(lat_s)) * 1e3
+    if not ms.size:
+        return {"p50_ms": float("nan"), "p95_ms": float("nan"), "p99_ms": float("nan")}
+    return {
+        "p50_ms": float(np.percentile(ms, 50)),
+        "p95_ms": float(np.percentile(ms, 95)),
+        "p99_ms": float(np.percentile(ms, 99)),
+    }
+
+
+def _run_inproc(api, server, fd_cfg, reqs, arrivals) -> tuple[dict, list]:
+    """The transport-free reference: the bench_frontdoor drive, on the
+    shared schedule."""
+
+    async def client(fd, i, lat):
+        await asyncio.sleep(float(arrivals[i]))
+        t0 = time.perf_counter()
+        try:
+            out = await fd.submit(reqs[i])
+        except api.RequestRejected:
+            return None
+        lat.append(time.perf_counter() - t0)
+        return out
+
+    async def drive():
+        lat: list = []
+        t0 = time.perf_counter()
+        async with api.FrontDoor(server, fd_cfg) as fd:
+            got = await asyncio.gather(*(client(fd, i, lat) for i in range(len(reqs))))
+        return got, lat, fd.report(), time.perf_counter() - t0
+
+    got, lat, rep, wall = asyncio.run(drive())
+    r = rep["requests"]
+    level = {
+        "completed": r["completed"],
+        "shed": r["shed"],
+        "recompiles": rep["recompiles"],
+        **_percentiles(lat),
+        "achieved_qps": r["completed"] / wall if wall > 0 else 0.0,
+    }
+    return level, got
+
+
+def _run_http(server, net_cfg, fd_cfg, reqs, arrivals, *, conns: int):
+    """The same schedule over real localhost sockets: a NetServer (its
+    own FrontDoor over the same api.Server) and a pool of persistent
+    async clients. 429s count as shed — no retries, so completed/shed
+    are comparable with the in-process reference."""
+    from repro.net.client import AsyncNetClient, RetryPolicy, ServerError
+    from repro.net.server import NetServer
+
+    async def drive():
+        lat: list = []
+        timing = np.zeros(3)
+        got: list = [None] * len(reqs)
+        shed = 0
+        async with NetServer(server, net_cfg, fd_cfg) as ns:
+            pool: asyncio.LifoQueue = asyncio.LifoQueue()
+            clients = [
+                AsyncNetClient(
+                    "127.0.0.1", ns.port, seed=k,
+                    retry=RetryPolicy(max_attempts=1),
+                )
+                for k in range(min(conns, len(reqs)))
+            ]
+            for c in clients:
+                pool.put_nowait(c)
+
+            async def one(i):
+                nonlocal shed
+                await asyncio.sleep(float(arrivals[i]))
+                t0 = time.perf_counter()  # offered: conn wait is queueing
+                c = await pool.get()
+                try:
+                    resp = await c.predict(reqs[i], request_id=f"r{i}")
+                except ServerError as err:
+                    if err.frame.code != "shed":
+                        raise
+                    shed += 1
+                    return
+                finally:
+                    pool.put_nowait(c)
+                lat.append(time.perf_counter() - t0)
+                timing[:] += resp.timing_ms
+                got[i] = (resp.mean(), resp.var())
+
+            t0 = time.perf_counter()
+            await asyncio.gather(*(one(i) for i in range(len(reqs))))
+            wall = time.perf_counter() - t0
+            rep = ns.slo()
+            for c in clients:
+                await c.close()
+        return got, lat, shed, timing, rep, wall
+
+    got, lat, shed, timing, rep, wall = asyncio.run(drive())
+    n_ok = len(lat)
+    level = {
+        "completed": n_ok,
+        "shed": shed,
+        "recompiles": rep["recompiles"],
+        **_percentiles(lat),
+        "achieved_qps": n_ok / wall if wall > 0 else 0.0,
+        "server_timing_mean_ms": (
+            dict(zip(("decode_ms", "engine_ms", "total_ms"), (timing / n_ok).tolist()))
+            if n_ok
+            else None
+        ),
+    }
+    return level, got
+
+
+def run(
+    *,
+    grid_side: int = 4,
+    m: int = 6,
+    n_train: int = 4000,
+    train_iters: int = 200,
+    qps_levels: tuple = (50.0, 100.0, 200.0),
+    requests_per_level: int = 80,
+    mode: str = "sharded",
+    router: str = "two-level",
+    max_wait_ms: float = 2.0,
+    max_rows: int = 1024,
+    queue_depth: int = 256,
+    conns: int = 16,
+    golden_checks: int = 10,
+    out_path: str = "BENCH_serve.json",
+) -> dict:
+    # virtual devices must be forced before any jax computation
+    from repro.launch import serve_sharded as ss
+
+    if mode == "sharded":
+        ss.ensure_host_devices(grid_side * grid_side)
+
+    import jax
+
+    from repro import api
+
+    print(f"# bench_net: grid={grid_side}x{grid_side} m={m} mode={mode} "
+          f"router={router} levels={list(qps_levels)} conns={conns} "
+          f"backend={jax.default_backend()}")
+    ds, fitted = ss.train_demo_surface(
+        seed=0, n=n_train, grid_side=grid_side, m=m, train_iters=train_iters,
+    )
+    serve_cfg = api.ServeConfig(
+        mode=mode, pipeline="pipelined" if mode == "sharded" else "serial",
+        router=router if mode == "sharded" else "single", backend="ref",
+    )
+    server = api.Server(fitted, serve_cfg)
+    # same warm policy as bench_frontdoor: one tiny request compiles the
+    # smallest program; q_max growth under load is part of the measurement
+    server.submit(np.array([[ds.x[:, 0].mean(), ds.x[:, 1].mean()]], np.float32))
+
+    fd_cfg = api.FrontDoorConfig(
+        max_wait_ms=max_wait_ms, max_rows=max_rows,
+        queue_depth=queue_depth, admission="shed",
+    )
+    net_cfg = api.NetConfig(port=0)  # OS-assigned localhost port per level
+
+    levels = []
+    golden = None
+    for k, qps in enumerate(qps_levels):
+        rng = np.random.default_rng(100 + k)
+        reqs, arrivals = _schedule(
+            rng, fitted.grid, n_req=requests_per_level,
+            max_rows=fd_cfg.max_request_rows, qps=float(qps),
+        )
+        inproc, _ = _run_inproc(api, server, fd_cfg, reqs, arrivals)
+        http, got = _run_http(
+            server, net_cfg, fd_cfg, reqs, arrivals, conns=conns
+        )
+        level = {
+            "offered_qps": float(qps),
+            "requests": requests_per_level,
+            "completed": http["completed"],
+            "shed": http["shed"],
+            "recompiles": http["recompiles"],
+            "p50_ms": http["p50_ms"],
+            "p95_ms": http["p95_ms"],
+            "p99_ms": http["p99_ms"],
+            "achieved_qps": http["achieved_qps"],
+            "server_timing_mean_ms": http["server_timing_mean_ms"],
+            "inproc_p50_ms": inproc["p50_ms"],
+            "inproc_p95_ms": inproc["p95_ms"],
+            "inproc_completed": inproc["completed"],
+            "wire_overhead_p50_ms": http["p50_ms"] - inproc["p50_ms"],
+            "wire_overhead_p95_ms": http["p95_ms"] - inproc["p95_ms"],
+        }
+        levels.append(level)
+        print(f"  qps={qps:>7.1f}: http p50={level['p50_ms']:7.2f} ms "
+              f"(in-proc {level['inproc_p50_ms']:7.2f} ms, wire "
+              f"+{level['wire_overhead_p50_ms']:.2f} ms) "
+              f"completed={level['completed']}/{level['requests']} "
+              f"shed={level['shed']}")
+        if k == 0:
+            # golden gate over the wire: HTTP payload == solo Server.submit.
+            # Sharded: BITWISE (fixed-shape program + raw-f32 frames).
+            # Replicated: float32-exact (XLA re-specializes per shape).
+            strict = mode == "sharded"
+            checked, ok, max_err = 0, True, 0.0
+            for q, out in zip(reqs, got):
+                if out is None or checked >= golden_checks:
+                    continue
+                ms, vs = server.submit(q)
+                if strict:
+                    ok = ok and np.array_equal(out[0], ms) \
+                        and np.array_equal(out[1], vs)
+                else:
+                    err = max(float(np.abs(out[0] - ms).max()),
+                              float(np.abs(out[1] - vs).max()))
+                    max_err = max(max_err, err)
+                    ok = ok and err <= 1e-5
+                checked += 1
+            golden = {
+                "checked": checked, "mode": mode, "ok": bool(ok),
+                "bitwise_ok": bool(ok) if strict else None,
+                "max_abs_err": None if strict else max_err,
+            }
+            if not ok:
+                raise SystemExit(
+                    "GOLDEN GATE FAILED: HTTP response payloads differ "
+                    "from solo Server.submit"
+                )
+
+    rec = {
+        "grid": f"{grid_side}x{grid_side}",
+        "m": m,
+        "mode": mode,
+        "router": router,
+        "backend": jax.default_backend(),
+        "requests_per_level": requests_per_level,
+        "conns": conns,
+        "serve_config": serve_cfg.to_dict(),
+        "frontdoor_config": fd_cfg.to_dict(),
+        "net_config": net_cfg.to_dict(),
+        "fit_config": fitted.config.to_dict(),
+        "levels": levels,
+        "golden": golden,
+        "qmax_policy": server.policy.stats() if server.policy else None,
+    }
+
+    # merge into the bench_serve report: the wire is one more lane of the
+    # same serving story
+    data = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            data = json.load(f)
+    data["http"] = rec
+    print(json.dumps(rec, indent=2))
+    with open(out_path, "w") as f:
+        json.dump(data, f, indent=2)
+    print(f"merged http section into {out_path}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized shapes (4x4 mesh, 3 levels)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale shapes (3x3 mesh) — the regression "
+                         "smoke lane (make bench-gate)")
+    ap.add_argument("--mode", choices=("sharded", "replicated"),
+                    default="sharded",
+                    help="serve mode behind the endpoint (default: sharded — "
+                         "the bitwise golden lane)")
+    ap.add_argument("--router", choices=("single", "two-level"),
+                    default="two-level",
+                    help="sharded router policy (default: two-level)")
+    ap.add_argument("--out", default="BENCH_serve.json",
+                    help="bench_serve report to merge the http section into "
+                         "(created if missing)")
+    args = ap.parse_args()
+    if args.smoke:
+        run(grid_side=3, m=5, n_train=1200, train_iters=150,
+            qps_levels=(25.0, 50.0, 100.0), requests_per_level=40,
+            mode=args.mode, router=args.router, conns=8, out_path=args.out)
+    elif args.quick:
+        run(grid_side=4, m=6, n_train=4000, train_iters=200,
+            qps_levels=(50.0, 100.0, 200.0), requests_per_level=60,
+            mode=args.mode, router=args.router, out_path=args.out)
+    else:
+        run(qps_levels=(50.0, 100.0, 200.0, 400.0),
+            requests_per_level=120, mode=args.mode, router=args.router,
+            out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

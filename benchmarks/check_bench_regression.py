@@ -2,7 +2,9 @@
 against the checked-in baseline and FAIL on a large p50 regression.
 A ``frontdoor`` section (``bench_frontdoor --smoke``) is auto-detected
 and gated too: lowest-offered-load p95 vs its own baseline, plus the
-coalesce/demux golden flag.
+coalesce/demux golden flag. Likewise an ``http`` section
+(``bench_net --smoke``): over-the-wire golden flag, end-to-end p95, and
+the wire-overhead ceiling (http p50 minus in-process p50).
 
 CI runs this after ``make bench-serve-smoke`` (``make bench-gate`` is the
 one-shot lane) so the serving pipeline's latency trajectory is enforced
@@ -42,6 +44,7 @@ FRONTDOOR_BASELINE = os.path.join(
 SWAP_BASELINE = os.path.join(
     os.path.dirname(__file__), "baselines", "frontdoor_swap_smoke.json"
 )
+NET_BASELINE = os.path.join(os.path.dirname(__file__), "baselines", "net_smoke.json")
 
 # lanes whose p50 the gate holds (path into the report, lane label)
 GATED_LANES = (
@@ -120,17 +123,90 @@ def check_frontdoor(
     return failures
 
 
+def check_net(
+    rec: dict, baseline_path: str = NET_BASELINE, *, update: bool = False,
+) -> list[str]:
+    """Gate the ``http`` section (``bench_net --smoke``): the over-the-wire
+    golden flag (HTTP payload bitwise == solo ``Server.submit`` on the
+    sharded program), the lowest offered-load level's end-to-end p95 vs
+    the checked-in baseline, AND the wire-overhead ceiling — http p50
+    minus in-process p50 at the same offered schedule. The overhead gate
+    is what catches a transport-layer regression (a lost keep-alive, an
+    accidental copy in framing, a blocking read on the loop) that the
+    end-to-end tail would blur into engine noise; same 2x-ratio +
+    absolute-slack rule as every other lane."""
+    failures = []
+    golden = rec.get("golden") or {}
+    if not golden.get("ok"):
+        failures.append(f"http golden gate broken: {golden}")
+    level = rec["levels"][0]
+
+    if update or not os.path.exists(baseline_path):
+        os.makedirs(os.path.dirname(baseline_path), exist_ok=True)
+        base = {
+            "p95_ms": level["p95_ms"],
+            "wire_overhead_p50_ms": level["wire_overhead_p50_ms"],
+            "_source": {
+                "grid": rec["grid"], "m": rec["m"], "mode": rec["mode"],
+                "router": rec["router"], "backend": rec["backend"],
+                "offered_qps": level["offered_qps"],
+                "requests": level["requests"],
+            },
+        }
+        with open(baseline_path, "w") as f:
+            json.dump(base, f, indent=2)
+            f.write("\n")
+        print(f"wrote baseline {baseline_path}")
+        return failures
+
+    with open(baseline_path) as f:
+        base = json.load(f)
+    src = base.get("_source", {})
+    for key in ("grid", "m", "mode", "router", "backend"):
+        if key in src and rec.get(key) != src[key]:
+            failures.append(
+                f"http report {key}={rec.get(key)!r} does not match the "
+                f"baseline's {src[key]!r} — refresh with --update in the "
+                "same commit"
+            )
+    if "offered_qps" in src and level["offered_qps"] != src["offered_qps"]:
+        failures.append(
+            f"http gate level offered_qps={level['offered_qps']} != "
+            f"baseline's {src['offered_qps']} — refresh with --update"
+        )
+    gates = (
+        ("http p95", level["p95_ms"], base["p95_ms"]),
+        ("wire overhead p50", level["wire_overhead_p50_ms"],
+         base["wire_overhead_p50_ms"]),
+    )
+    for name, got, ref in gates:
+        # overhead can be sub-ms and noisy (even negative under jitter);
+        # floor both sides so the ratio stays meaningful
+        got_f, ref_f = max(got, 0.01), max(ref, 0.01)
+        ratio = got_f / ref_f
+        bad = ratio > MAX_REGRESSION and got - ref > ABS_SLACK_MS
+        status = "FAIL" if bad else "OK"
+        print(f"{status}: {name} @ {level['offered_qps']:.0f} qps "
+              f"{got:.2f} ms vs baseline {ref:.2f} ms ({ratio:.2f}x, "
+              f"limit {MAX_REGRESSION:.1f}x + {ABS_SLACK_MS:.0f} ms slack)")
+        if bad:
+            failures.append(f"{name} regressed {ratio:.2f}x")
+    return failures
+
+
 def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = False,
           frontdoor_baseline: str = FRONTDOOR_BASELINE,
-          swap_baseline: str = SWAP_BASELINE) -> int:
+          swap_baseline: str = SWAP_BASELINE,
+          net_baseline: str = NET_BASELINE) -> int:
     with open(report_path) as f:
         rec = json.load(f)
 
-    # a frontdoor-only report (bench_frontdoor --out <fresh file>): gate
-    # just those sections
+    # an endpoint-only report (bench_frontdoor / bench_net --out <fresh
+    # file>): gate just those sections
     if "replicated" not in rec:
-        if "frontdoor" not in rec and "frontdoor_swap" not in rec:
-            print("FAIL: report has neither serve lanes nor a frontdoor section")
+        if not any(k in rec for k in ("frontdoor", "frontdoor_swap", "http")):
+            print("FAIL: report has neither serve lanes nor a "
+                  "frontdoor/http section")
             return 1
         failures = []
         if "frontdoor" in rec:
@@ -142,6 +218,8 @@ def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = Fal
                 rec["frontdoor_swap"], swap_baseline, update=update,
                 label="frontdoor_swap",
             )
+        if "http" in rec:
+            failures += check_net(rec["http"], net_baseline, update=update)
         for msg in failures:
             print(f"FAIL: {msg}")
         if not failures:
@@ -158,6 +236,8 @@ def check(report_path: str, baseline_path: str = BASELINE, *, update: bool = Fal
             rec["frontdoor_swap"], swap_baseline, update=update,
             label="frontdoor_swap",
         )
+    if "http" in rec:
+        failures += check_net(rec["http"], net_baseline, update=update)
     eq = rec.get("equivalence", {})
     if not eq.get("atol_1e5_ok"):
         failures.append(f"equivalence gate broken: {eq}")
@@ -234,6 +314,7 @@ def main() -> None:
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--frontdoor-baseline", default=FRONTDOOR_BASELINE)
     ap.add_argument("--swap-baseline", default=SWAP_BASELINE)
+    ap.add_argument("--net-baseline", default=NET_BASELINE)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from this report instead of gating")
     ap.add_argument("--section", choices=("serve", "analysis"), default="serve",
@@ -247,7 +328,8 @@ def main() -> None:
         ap.error("report path required for --section serve")
     sys.exit(check(args.report, args.baseline, update=args.update,
                    frontdoor_baseline=args.frontdoor_baseline,
-                   swap_baseline=args.swap_baseline))
+                   swap_baseline=args.swap_baseline,
+                   net_baseline=args.net_baseline))
 
 
 if __name__ == "__main__":

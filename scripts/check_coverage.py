@@ -14,6 +14,10 @@ serving guarantees live in:
     measurement halves (hlo lowering, cost compilation, sharded
     contracts) run via CLI subprocesses, so in-process coverage
     understates them — the floor is set for the pure judgment code.
+  * ``repro/net/`` — the wire layer (protocol, transport, clients). The
+    CLI ``main``s and the sharded over-the-wire path run in subprocesses
+    (``tests/test_net.py``), invisible to in-process coverage, so the
+    floor covers the frame codec + client/server state machines.
 
 The floors are RATCHETS, not aspirations: set below current coverage so
 the gate only fires when tests are lost or a new untested surface lands.
@@ -36,6 +40,7 @@ FLOORS = (
     # __main__.py is the CLI driver: exercised end-to-end by the
     # subprocess tests and make analyze, invisible to in-process cov
     ("repro/analysis/", ("__main__.py",), 75.0),
+    ("repro/net/", (), 70.0),
 )
 
 

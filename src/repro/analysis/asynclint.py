@@ -10,7 +10,8 @@ unresolved future hangs a client forever with no traceback anywhere.
 
 This pass codifies those hazards as AST rules over every source file
 (today that means ``api/frontdoor.py``, ``api/server.py``,
-``launch/serve_sharded.py`` — and any async code a later PR adds):
+``launch/serve_sharded.py``, the ``net/`` transport layer — and any
+async code a later PR adds):
 
   RR005  no blocking calls inside ``async def``: ``time.sleep``,
          ``Future.result()``, stdlib ``queue`` get/put/join,
@@ -98,6 +99,14 @@ CONFINEMENT: dict = {
                 "and the flip is a plain atomic reference store"
             ),
         },
+    },
+    "repro/net/server.py": {
+        # The HTTP endpoint is pure event-loop code: connection handlers
+        # are loop tasks, the engine's threads live behind FrontDoor's
+        # own (already-manifested) confinement, and NetServer never
+        # hands a method to a worker — so its transport counters are
+        # loop-confined by construction and need no exemptions.
+        "NetServer": {},
     },
 }
 # A with-block on an attribute whose name contains this guards its body.

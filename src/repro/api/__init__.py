@@ -35,20 +35,23 @@ over this package. See docs/api.md.
 from repro.api.config import (
     FitConfig,
     FrontDoorConfig,
+    NetConfig,
     RefitConfig,
     ServeConfig,
     load_session,
 )
 from repro.api.fitted import FittedPSVGP, fit, peek_fit_config, peek_steps, refit
-from repro.api.frontdoor import FrontDoor, RequestRejected
+from repro.api.frontdoor import FrontDoor, RequestRejected, RequestTooLarge
 from repro.api.server import Server
 
 __all__ = [
     "FitConfig",
     "FrontDoor",
     "FrontDoorConfig",
+    "NetConfig",
     "RefitConfig",
     "RequestRejected",
+    "RequestTooLarge",
     "ServeConfig",
     "FittedPSVGP",
     "Server",

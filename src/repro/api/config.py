@@ -381,22 +381,89 @@ class FrontDoorConfig:
         return cls.from_dict(json.loads(s))
 
 
+@dataclasses.dataclass(frozen=True)
+class NetConfig:
+    """How the HTTP front door (``repro.net.server``) binds and guards the
+    socket. The transport knobs only — batching and admission stay in
+    :class:`FrontDoorConfig`, the model in Fit/ServeConfig.
+
+    Fields:
+      host / port: the listen address. Port 0 asks the OS for a free
+        port (the test and benchmark lane); the bound port is in
+        ``NetServer.port``.
+      max_body_bytes: largest accepted ``POST /predict`` body. A body
+        over the cap is refused with 413 BEFORE it is read into memory —
+        the transport-level twin of the front door's
+        ``max_request_rows`` admission check.
+      read_timeout_s: per-request read deadline — a client that stalls
+        mid-body is disconnected rather than pinning a reader task.
+      keepalive: serve multiple requests per connection (HTTP/1.1
+        persistent connections). Off, every response carries
+        ``Connection: close`` — the A/B knob for measuring connection
+        setup cost in ``bench_net``.
+    """
+
+    host: str = "127.0.0.1"
+    port: int = 8777
+    max_body_bytes: int = 1_048_576
+    read_timeout_s: float = 30.0
+    keepalive: bool = True
+
+    def __post_init__(self) -> None:
+        _check(
+            isinstance(self.host, str) and len(self.host) > 0,
+            f"host must be a non-empty str, got {self.host!r}",
+        )
+        _check(
+            0 <= int(self.port) <= 65535,
+            f"port must be in [0, 65535] (0 = OS-assigned), got {self.port}",
+        )
+        _check(
+            int(self.max_body_bytes) >= 1024,
+            f"max_body_bytes must be >= 1024, got {self.max_body_bytes}",
+        )
+        _check(
+            float(self.read_timeout_s) > 0,
+            f"read_timeout_s must be > 0, got {self.read_timeout_s}",
+        )
+        _check(
+            isinstance(self.keepalive, bool),
+            f"keepalive must be a bool, got {self.keepalive!r}",
+        )
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NetConfig":
+        return _from_dict(cls, d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "NetConfig":
+        return cls.from_dict(json.loads(s))
+
+
 def load_session(path: str):
-    """Read a session file: ``{"fit": {...}, "serve": {...}}``, both
-    sections optional, no other keys. Returns (fit, serve) with ``None``
-    for an absent section.
+    """Read a session file: ``{"fit": {...}, "serve": {...}, "net":
+    {...}}``, every section optional, no other keys. Returns
+    (fit, serve, net) with ``None`` for an absent section.
 
     This is the ``--config session.json`` lane of the serving CLIs — the
     same JSON a saved artifact manifest or a benchmark row carries, so a
     recorded session replays without reconstructing flag spellings.
     Stdlib-only on purpose: the sharded CLI must read the fit grid (to
-    force one virtual device per partition) BEFORE jax initializes.
+    force one virtual device per partition) — and the HTTP CLI the bind
+    address — BEFORE jax initializes.
     """
     with open(path, encoding="utf-8") as f:
         d = json.load(f)
     _check(isinstance(d, dict), f"session file {path} must hold a JSON object")
-    unknown = set(d) - {"fit", "serve"}
-    _check(not unknown, f"unknown session sections {sorted(unknown)}; use 'fit'/'serve'")
+    unknown = set(d) - {"fit", "serve", "net"}
+    _check(not unknown, f"unknown session sections {sorted(unknown)}; use 'fit'/'serve'/'net'")
     fit = FitConfig.from_dict(d["fit"]) if "fit" in d else None
     serve = ServeConfig.from_dict(d["serve"]) if "serve" in d else None
-    return fit, serve
+    net = NetConfig.from_dict(d["net"]) if "net" in d else None
+    return fit, serve, net

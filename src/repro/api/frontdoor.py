@@ -80,6 +80,19 @@ class RequestRejected(RuntimeError):
     (``FrontDoorConfig.admission == "shed"`` and the queue was full)."""
 
 
+class RequestTooLarge(ValueError):
+    """Raised at admission for a single request above
+    ``FrontDoorConfig.max_request_rows``. A ``ValueError`` subclass (it
+    IS a validation failure) but typed so transports can distinguish
+    it — the HTTP layer maps it to 413, where a generic bad request is
+    400. Rejecting at admission is load-bearing, not cosmetic: a
+    request bigger than the batching window could otherwise wedge
+    ``_gather_window`` (``rows < max_rows`` never admits a second
+    request yet the window is already over budget) and push a single
+    coalesced batch past the jit-stable block budget the q_max policy
+    sized for."""
+
+
 @dataclasses.dataclass
 class _Request:
     """One admitted client request waiting in the batching queue."""
@@ -161,8 +174,10 @@ class FrontDoor:
         pts = np.asarray(points, np.float32)
         if pts.ndim != 2 or pts.shape[1] != 2:
             raise ValueError(f"request must be (n, 2) points, got shape {pts.shape}")
-        if not 1 <= pts.shape[0] <= self.config.max_request_rows:
-            raise ValueError(
+        if pts.shape[0] < 1:
+            raise ValueError(f"request must hold at least one point, got {pts.shape[0]}")
+        if pts.shape[0] > self.config.max_request_rows:
+            raise RequestTooLarge(
                 f"request rows must be in [1, {self.config.max_request_rows}] "
                 f"(FrontDoorConfig.max_request_rows), got {pts.shape[0]} — "
                 "send bulk batches straight to Server.submit"
@@ -185,6 +200,12 @@ class FrontDoor:
         await self._queue.put(req)
         self._admitted += 1
         return await req.future
+
+    @property
+    def broken(self) -> bool:
+        """True once the engine has died — every subsequent submit raises.
+        Read-only introspection for health endpoints (``repro.net``)."""
+        return self._broken is not None
 
     # -- lifecycle ---------------------------------------------------------
 

@@ -51,7 +51,7 @@ def serve_gp(args) -> None:
         session_configs,
     )
 
-    fit_cfg, serve_cfg = session_configs(args, expect_mode="replicated")
+    fit_cfg, serve_cfg, _ = session_configs(args, expect_mode="replicated")
     ds, fitted = load_or_train(args, fit_cfg=fit_cfg)
 
     t0 = time.time()
@@ -101,9 +101,20 @@ def main() -> None:
 
     if args.sharded and not args.gp:
         ap.error("--sharded only applies to the GP serving mode (add --gp)")
+    if args.http and not args.gp:
+        ap.error("--http only applies to the GP serving mode (add --gp)")
     if args.gp:
         if args.gp_requests < 1 or args.gp_batch < 1:
             ap.error("--gp-requests and --gp-batch must be >= 1")
+        if args.http:
+            # like --sharded below: nothing above initialized the jax
+            # backend, so the HTTP driver can still force virtual devices.
+            from repro.net.server import serve_http
+
+            serve_http(
+                args, expect_mode="sharded" if args.sharded else "replicated"
+            )
+            return
         if args.sharded:
             # imports and argparse above never initialize the jax backend,
             # so serve_sharded can still force the virtual device count.

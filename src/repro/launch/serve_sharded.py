@@ -601,24 +601,35 @@ def query_batches(
 
 
 def session_configs(args, *, expect_mode: str):
-    """The ``--config session.json`` lane shared by both serving CLIs:
-    returns (fit_cfg, serve_cfg) — (None, None) without the flag. Loading
-    is pure JSON (``api.load_session`` is stdlib-only), so the sharded
-    caller can still force virtual devices afterwards. A serve section
-    whose mode contradicts the running entry point is an error, not a
-    silent reroute."""
+    """The ``--config session.json`` lane shared by the serving CLIs:
+    returns (fit_cfg, serve_cfg, net_cfg) — (None, None, None) without
+    the flag. Loading is pure JSON (``api.load_session`` is
+    stdlib-only), so the sharded caller can still force virtual devices
+    afterwards (and the HTTP caller can read the bind address before
+    jax initializes). A serve section whose mode contradicts the
+    running entry point is an error, not a silent reroute — and so is
+    ``--http`` against a session file with no ``net`` section: a
+    recorded session must say where it binds, or the replay is not the
+    session."""
     if not getattr(args, "config", None):
-        return None, None
+        return None, None, None
     from repro.api.config import load_session
 
-    fit_cfg, serve_cfg = load_session(args.config)
+    fit_cfg, serve_cfg, net_cfg = load_session(args.config)
     if serve_cfg is not None and serve_cfg.mode != expect_mode:
         raise SystemExit(
             f"--config {args.config}: serve section has mode="
             f"{serve_cfg.mode!r} but this entry point serves "
             f"{expect_mode!r} (pick the matching CLI or fix the session)"
         )
-    return fit_cfg, serve_cfg
+    if getattr(args, "http", False) and net_cfg is None:
+        raise SystemExit(
+            f"--http with --config {args.config}: the session file has no "
+            "'net' section (host/port/max_body_bytes/read_timeout_s/"
+            "keepalive — api.NetConfig). Add one, or drop --http to serve "
+            "the in-process demo stream."
+        )
+    return fit_cfg, serve_cfg, net_cfg
 
 
 def serve_sharded(args) -> dict:
@@ -633,7 +644,7 @@ def serve_sharded(args) -> dict:
     replicated path on the first batch and the streaming-q_max policy
     counters.
     """
-    fit_cfg, serve_cfg = session_configs(args, expect_mode="sharded")
+    fit_cfg, serve_cfg, _ = session_configs(args, expect_mode="sharded")
     if not getattr(args, "gp_artifact", None):
         grid_side = fit_cfg.grid if fit_cfg is not None else args.gp_grid
         ensure_host_devices(grid_side * grid_side)
@@ -812,12 +823,18 @@ def add_gp_args(ap: argparse.ArgumentParser) -> None:
                          "ignores the --gp-n/--gp-m/--gp-train-iters "
                          "training flags")
     ap.add_argument("--config", metavar="SESSION_JSON", default=None,
-                    help="session file with optional 'fit' and 'serve' "
-                         "sections (repro.api load_session). The fit "
+                    help="session file with optional 'fit', 'serve' and "
+                         "'net' sections (repro.api load_session). The fit "
                          "section replaces the --gp-grid/--gp-m/"
                          "--gp-train-iters training flags; the serve "
                          "section replaces --gp-serial/--gp-router (its "
-                         "mode must match the chosen entry point)")
+                         "mode must match the chosen entry point); the net "
+                         "section is required when combined with --http")
+    ap.add_argument("--http", action="store_true",
+                    help="serve over HTTP (repro.net.server: POST /predict "
+                         "+ GET /healthz + GET /slo on the 'net' section's "
+                         "or NetConfig's default bind address) instead of "
+                         "running the in-process demo query stream")
 
 
 def main() -> None:
@@ -827,6 +844,13 @@ def main() -> None:
     args = ap.parse_args()
     if args.gp_requests < 1 or args.gp_batch < 1:
         ap.error("--gp-requests and --gp-batch must be >= 1")
+    if args.http:
+        # imports and argparse above never initialize the jax backend, so
+        # the HTTP driver can still force the virtual device count.
+        from repro.net.server import serve_http
+
+        serve_http(args, expect_mode="sharded")
+        return
     serve_sharded(args)
 
 

@@ -1,0 +1,51 @@
+"""repro.net — the HTTP front door over the wire.
+
+Everything before this package — continuous batching, admission
+control, hot swap (``repro.api.FrontDoor``) — is in-process asyncio:
+the "millions of users" story stopped at the Python API boundary. This
+package is the actual transport in front of it, in three deliberately
+thin layers over the transport-agnostic coalesce/demux/backpressure
+engine (which does not change):
+
+  * :mod:`repro.net.protocol` — the versioned, msgpack-framed wire
+    protocol: a predict request is a points array + request id; a
+    response is mean/var + the serving model version + a timing
+    breakdown; failures are TYPED error frames (shed / oversized /
+    engine-broken / bad-request / internal). Decoding is strict in the
+    spirit of the frozen config dataclasses: unknown keys, truncated
+    payloads, and version mismatches all raise.
+  * :mod:`repro.net.server` — an asyncio HTTP/1.1 endpoint
+    (``POST /predict``, ``GET /healthz``, ``GET /slo``) that is a thin
+    adapter over ``FrontDoor.submit``: shed maps to 429 with
+    Retry-After, an oversized request to 413, a broken engine to 503.
+    ``python -m repro.net.server`` / ``serve --gp --http`` serve it.
+  * :mod:`repro.net.client` — a small sync + async client (connection
+    reuse, bounded jittered retries on 429/503 honoring Retry-After,
+    per-request deadlines) used by the tests and ``bench_net``.
+
+Only small summaries ever cross the wire — query points in, mean/var
+out, a few hundred bytes per request — never data or factors, the
+Katzfuss/Hammerling low-rank distributed framing (PAPERS.md,
+arXiv 1402.1472). ``benchmarks/bench_net.py`` measures what the wire
+adds: open-loop Poisson arrivals over real localhost sockets, the
+golden bitwise property extended end-to-end over HTTP, and a
+wire-overhead column (http p50 − in-process p50) per offered-QPS
+level. See docs/net.md.
+"""
+from repro.net.protocol import (
+    PROTOCOL_VERSION,
+    ErrorFrame,
+    PredictRequest,
+    PredictResponse,
+    ProtocolError,
+    decode_frame,
+)
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "ErrorFrame",
+    "PredictRequest",
+    "PredictResponse",
+    "ProtocolError",
+    "decode_frame",
+]

@@ -1,0 +1,23 @@
+"""RR006 fixture, transport-shaped: an HTTP-endpoint-like class whose
+request counter is written by both a connection-handler coroutine (event
+loop) and a stats flusher handed to a worker thread — no lock, no
+CONFINEMENT entry. The shipped ``repro.net.server.NetServer`` avoids
+exactly this by never handing a method to a thread (its counters are
+loop-confined; see the asynclint CONFINEMENT manifest)."""
+import asyncio
+import concurrent.futures
+
+
+class Endpoint:
+    def __init__(self):
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self.http_requests = 0
+
+    def _flush_stats(self):
+        self.http_requests = 0
+
+    async def handle_conn(self, reader, writer):
+        self.http_requests += 1
+        loop = asyncio.get_running_loop()
+        done = await loop.run_in_executor(self._pool, self._flush_stats)
+        return done

@@ -252,6 +252,7 @@ def test_fixture_tree_is_dirty_end_to_end():
     [
         ("bad_async_rr005.py", "RR005"),
         ("bad_async_rr006.py", "RR006"),
+        ("bad_async_net_rr006.py", "RR006"),
         ("bad_async_rr007.py", "RR007"),
         ("bad_async_rr008.py", "RR008"),
     ],

@@ -243,6 +243,27 @@ def test_validation_and_lifecycle(server):
     asyncio.run(main())
 
 
+def test_oversized_request_raises_typed_request_too_large(server):
+    """An over-cap request raises the TYPED ``RequestTooLarge`` — a
+    ``ValueError`` subclass (existing callers keep working) that the
+    transport layer maps to HTTP 413 without string-matching — while an
+    empty request stays a plain ValueError (a malformed request, not an
+    admission decision)."""
+    assert issubclass(api.RequestTooLarge, ValueError)
+
+    async def main():
+        fd = api.FrontDoor(server, api.FrontDoorConfig(max_request_rows=8))
+        with pytest.raises(api.RequestTooLarge, match="Server.submit"):
+            await fd.submit(np.zeros((9, 2), np.float32))
+        with pytest.raises(ValueError) as exc:
+            await fd.submit(np.zeros((0, 2), np.float32))
+        assert not isinstance(exc.value, api.RequestTooLarge)
+        assert not fd.broken  # validation rejections never break the engine
+        await fd.close()
+
+    asyncio.run(main())
+
+
 def test_engine_crash_rejects_all_queued_futures(server):
     """The engine dying mid-stream must REJECT every windowed and queued
     future — a hung client is worse than an error — and the door must

@@ -1,0 +1,716 @@
+"""The wire layer (repro.net): protocol strictness, client retry/deadline
+behavior, the HTTP endpoint's status-code contract, and the golden
+property extended over real sockets.
+
+Three tiers, cheapest first:
+
+  * pure protocol tests — encode/decode round trips and every malformed-
+    frame class (truncated, trailing, garbage, version mismatch, key-set
+    violations), no sockets, no jax;
+  * client-vs-scripted-server tests — a threaded plain-socket HTTP stub
+    answers a scripted status sequence, driving the retry/backoff/
+    deadline logic of both clients deterministically;
+  * end-to-end tests — a real ``NetServer`` (port 0) over a small
+    replicated model in a background loop thread, exercised by both
+    clients: payload equivalence, every engine outcome's HTTP status,
+    keepalive, /healthz, /slo, and a mid-stream ``Server.swap`` with
+    zero failed requests. The sharded BITWISE golden gate runs in a
+    subprocess (virtual host devices before jax init, as everywhere).
+"""
+import asyncio
+import contextlib
+import http.client
+import json
+import os
+import socket
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+import types
+from pathlib import Path
+
+import msgpack
+import numpy as np
+import pytest
+
+from repro.net import protocol
+from repro.net.client import (
+    AsyncNetClient,
+    DeadlineExceeded,
+    NetClient,
+    RetriesExhausted,
+    RetryPolicy,
+    ServerError,
+)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# protocol: round trips
+# ---------------------------------------------------------------------------
+
+
+def test_predict_request_round_trip_is_bitwise():
+    pts = np.random.default_rng(0).uniform(-3, 7, (17, 2))
+    req = protocol.PredictRequest.from_points("req-1", pts)
+    out = protocol.decode_frame(req.encode())
+    assert out == req and isinstance(out, protocol.PredictRequest)
+    # float32 cast happens exactly once, at from_points
+    assert np.array_equal(out.points(), pts.astype(np.float32))
+    assert out.points().dtype == np.float32
+
+
+def test_predict_response_round_trip_is_bitwise():
+    mean = np.random.default_rng(1).normal(size=9).astype(np.float32)
+    var = np.random.default_rng(2).uniform(0.1, 2, 9).astype(np.float32)
+    resp = protocol.PredictResponse.from_arrays(
+        "r", mean, var, server_version=3, timing_ms=(0.5, 1.5, 2.25)
+    )
+    out = protocol.decode_frame(resp.encode())
+    assert out == resp
+    assert np.array_equal(out.mean(), mean) and np.array_equal(out.var(), var)
+    assert out.server_version == 3
+    assert out.timing() == {"decode_ms": 0.5, "engine_ms": 1.5, "total_ms": 2.25}
+
+
+@pytest.mark.parametrize("retry_ms", [None, 50.0])
+def test_error_frame_round_trip(retry_ms):
+    frame = protocol.ErrorFrame("x", "shed", "queue full", retry_after_ms=retry_ms)
+    out = protocol.decode_frame(frame.encode())
+    assert out == frame and out.retry_after_ms == retry_ms
+
+
+def test_every_error_code_pins_a_status():
+    for code in protocol.ERROR_CODES:
+        frame = protocol.ErrorFrame("", code, "x")
+        assert frame.status == protocol.STATUS_FOR_CODE[code]
+    assert sorted(protocol.STATUS_FOR_CODE) == sorted(protocol.ERROR_CODES)
+
+
+# ---------------------------------------------------------------------------
+# protocol: strict decode — every malformed class raises ProtocolError
+# ---------------------------------------------------------------------------
+
+
+def _valid_frame_dict():
+    return msgpack.unpackb(
+        protocol.PredictRequest.from_points("r", np.zeros((2, 2))).encode(),
+        raw=False,
+    )
+
+
+@pytest.mark.parametrize(
+    "mutate,why",
+    [
+        (lambda buf: buf[:-3], "truncated"),
+        (lambda buf: buf + b"xx", "trailing bytes"),
+        (lambda buf: b"\xc1garbage", "garbage"),
+        (lambda buf: b"", "empty"),
+    ],
+)
+def test_malformed_bytes_raise_protocol_error(mutate, why):
+    buf = protocol.PredictRequest.from_points("r", np.zeros((3, 2))).encode()
+    with pytest.raises(protocol.ProtocolError):
+        protocol.decode_frame(mutate(buf)), why
+
+
+@pytest.mark.parametrize(
+    "mutate,match",
+    [
+        (lambda d: d.update(v=99), "version mismatch"),
+        (lambda d: d.pop("v"), "missing protocol version"),
+        (lambda d: d.update(kind="telemetry"), "unknown frame kind"),
+        (lambda d: d.update(extra=1), "key set mismatch"),
+        (lambda d: d.pop("n"), "key set mismatch"),
+        (lambda d: d.update(n="2"), "must be an int"),
+        (lambda d: d.update(n=5), "must be .* bytes"),  # n disagrees with bytes
+        (lambda d: d.update(request_id=""), "non-empty str"),
+    ],
+)
+def test_structurally_invalid_frames_raise_protocol_error(mutate, match):
+    d = _valid_frame_dict()
+    mutate(d)
+    with pytest.raises(protocol.ProtocolError, match=match):
+        protocol.decode_frame(msgpack.packb(d, use_bin_type=True))
+
+
+def test_non_map_frame_raises():
+    with pytest.raises(protocol.ProtocolError, match="msgpack map"):
+        protocol.decode_frame(msgpack.packb([1, 2, 3]))
+
+
+def test_construction_validation():
+    with pytest.raises(protocol.ProtocolError, match=r"\(n >= 1, 2\)"):
+        protocol.PredictRequest.from_points("r", np.zeros((0, 2)))
+    with pytest.raises(protocol.ProtocolError, match="non-empty str"):
+        protocol.PredictRequest.from_points("", np.zeros((1, 2)))
+    with pytest.raises(protocol.ProtocolError, match="code must be one of"):
+        protocol.ErrorFrame("", "nope", "x")
+    with pytest.raises(protocol.ProtocolError, match="equal-length"):
+        protocol.PredictResponse.from_arrays(
+            "r", np.zeros(3), np.zeros(4), server_version=0,
+            timing_ms=(0.0, 0.0, 0.0),
+        )
+
+
+# ---------------------------------------------------------------------------
+# clients vs a scripted server: retry, backoff, deadline
+# ---------------------------------------------------------------------------
+
+
+class ScriptedHTTP:
+    """Plain-socket HTTP stub in a daemon thread answering POST /predict
+    with a scripted (status, body, headers) sequence — the last entry
+    repeats. Drives the clients' retry logic without an engine."""
+
+    def __init__(self, script):
+        self.script = list(script)
+        self.hits = 0
+        self._srv = socket.create_server(("127.0.0.1", 0))
+        self.port = self._srv.getsockname()[1]
+        threading.Thread(target=self._serve, daemon=True).start()
+
+    def _serve(self):
+        while True:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return  # listener closed: stub done
+            threading.Thread(
+                target=self._conn, args=(conn,), daemon=True
+            ).start()
+
+    def _conn(self, conn):
+        with conn, contextlib.suppress(ConnectionError, OSError, ValueError):
+            f = conn.makefile("rb")
+            while self._one(conn, f):
+                pass
+
+    def _one(self, conn, f):
+        line = f.readline()
+        if not line:
+            return False
+        headers = {}
+        while True:
+            h = f.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin-1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        n = int(headers.get("content-length", "0"))
+        if n:
+            f.read(n)
+        status, body, extra = self.script[min(self.hits, len(self.script) - 1)]
+        self.hits += 1
+        head = (
+            f"HTTP/1.1 {status} X\r\nContent-Type: application/msgpack\r\n"
+            f"Content-Length: {len(body)}\r\nConnection: keep-alive\r\n"
+        )
+        for k, v in extra.items():
+            head += f"{k}: {v}\r\n"
+        conn.sendall(head.encode("latin-1") + b"\r\n" + body)
+        return True
+
+    def close(self):
+        self._srv.close()
+
+
+def _ok(request_id, n=2):
+    return protocol.PredictResponse.from_arrays(
+        request_id, np.zeros(n, np.float32), np.ones(n, np.float32),
+        server_version=0, timing_ms=(0.1, 0.2, 0.3),
+    ).encode()
+
+
+def _err(code, retry_ms=None):
+    return protocol.ErrorFrame(
+        "", code, f"scripted {code}", retry_after_ms=retry_ms
+    ).encode()
+
+
+PTS = np.zeros((2, 2), np.float32)
+FAST = RetryPolicy(max_attempts=4, base_backoff_ms=1.0, jitter=0.0)
+
+
+@contextlib.contextmanager
+def scripted(script):
+    stub = ScriptedHTTP(script)
+    try:
+        yield stub
+    finally:
+        stub.close()
+
+
+def test_sync_client_retries_shed_then_succeeds():
+    script = [(429, _err("shed", 5.0), {}), (429, _err("shed", 5.0), {}),
+              (200, _ok("r1"), {})]
+    with scripted(script) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST, seed=0
+    ) as c:
+        resp = c.predict(PTS, request_id="r1")
+    assert isinstance(resp, protocol.PredictResponse)
+    assert stub.hits == 3  # two sheds burned two attempts, third answered
+
+
+def test_sync_client_exhausts_attempts():
+    with scripted([(429, _err("shed", 1.0), {})]) as stub, NetClient(
+        "127.0.0.1", stub.port,
+        retry=RetryPolicy(max_attempts=2, base_backoff_ms=1.0, jitter=0.0),
+    ) as c:
+        with pytest.raises(RetriesExhausted) as exc:
+            c.predict(PTS)
+    assert exc.value.status == 429 and exc.value.frame.code == "shed"
+    assert stub.hits == 2  # exactly the attempt budget, then gave up
+
+
+def test_sync_client_never_retries_4xx_that_cannot_succeed():
+    with scripted([(413, _err("oversized"), {})]) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST
+    ) as c:
+        with pytest.raises(ServerError) as exc:
+            c.predict(PTS)
+    assert not isinstance(exc.value, RetriesExhausted)
+    assert exc.value.status == 413 and exc.value.frame.code == "oversized"
+    assert stub.hits == 1  # oversized will never fit: one attempt only
+
+
+def test_sync_client_honors_frame_retry_hint():
+    hint = 80.0
+    script = [(429, _err("shed", hint), {}), (200, _ok("r1"), {})]
+    with scripted(script) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST
+    ) as c:
+        t0 = time.monotonic()
+        c.predict(PTS, request_id="r1")
+        waited = time.monotonic() - t0
+    assert stub.hits == 2
+    assert waited >= hint / 1e3  # jitter=0: the wait is at least the hint
+
+
+def test_sync_client_deadline_beats_long_retry_hint():
+    with scripted([(429, _err("shed", 500.0), {})]) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST
+    ) as c:
+        with pytest.raises(DeadlineExceeded, match="cross the deadline"):
+            c.predict(PTS, deadline_s=0.05)
+    assert stub.hits == 1  # refused to sleep past the deadline
+
+
+def test_200_with_wrong_frame_kind_is_a_protocol_error():
+    with scripted([(200, _err("internal"), {})]) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST
+    ) as c:
+        with pytest.raises(protocol.ProtocolError, match="ErrorFrame"):
+            c.predict(PTS)
+    del stub
+
+
+def test_200_with_foreign_request_id_is_a_protocol_error():
+    with scripted([(200, _ok("someone-else"), {})]) as stub, NetClient(
+        "127.0.0.1", stub.port, retry=FAST
+    ) as c:
+        with pytest.raises(protocol.ProtocolError, match="someone-else"):
+            c.predict(PTS, request_id="mine")
+    del stub
+
+
+def test_async_client_retries_then_succeeds_and_reuses_connection():
+    script = [(429, _err("shed", 2.0), {}), (200, _ok("r1"), {}),
+              (200, _ok("r2"), {})]
+
+    async def main(port):
+        async with AsyncNetClient(
+            "127.0.0.1", port, retry=FAST, seed=0
+        ) as c:
+            r1 = await c.predict(PTS, request_id="r1")
+            writer = c._writer  # persistent pair after the first success
+            r2 = await c.predict(PTS, request_id="r2")
+            assert c._writer is writer  # keepalive: no reconnect
+        return r1, r2
+
+    with scripted(script) as stub:
+        r1, r2 = asyncio.run(main(stub.port))
+    assert r1.request_id == "r1" and r2.request_id == "r2"
+    assert stub.hits == 3
+
+
+def test_async_client_deadline():
+    async def main(port):
+        async with AsyncNetClient("127.0.0.1", port, retry=FAST) as c:
+            with pytest.raises(DeadlineExceeded):
+                await c.predict(PTS, deadline_s=0.05)
+
+    with scripted([(429, _err("shed", 500.0), {})]) as stub:
+        asyncio.run(main(stub.port))
+
+
+def test_retry_policy_validates_and_schedules():
+    with pytest.raises(ValueError, match="max_attempts"):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError, match="jitter"):
+        RetryPolicy(jitter=1.5)
+    with pytest.raises(ValueError, match="max_backoff_ms"):
+        RetryPolicy(base_backoff_ms=100.0, max_backoff_ms=10.0)
+    import random
+
+    p = RetryPolicy(base_backoff_ms=10.0, max_backoff_ms=40.0, jitter=0.0)
+    rng = random.Random(0)
+    assert p.delay_s(0, None, rng) == 0.010
+    assert p.delay_s(2, None, rng) == 0.040  # capped at max_backoff
+    assert p.delay_s(0, 200.0, rng) == 0.200  # server hint dominates
+
+
+# ---------------------------------------------------------------------------
+# end-to-end over a real NetServer (replicated model, loop in a thread)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server():
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=500, seed=0)
+    fitted = api.fit(api.FitConfig(grid=2, m=4, train_iters=60, seed=0), ds)
+    return api.Server(fitted)
+
+
+@contextlib.contextmanager
+def running(server, net=None, frontdoor=None):
+    """A NetServer on its own loop thread — so the BLOCKING NetClient can
+    be exercised against it from the test thread. Defaults to port 0
+    (OS-assigned) so concurrent test runs never collide on the fixed
+    NetConfig default."""
+    from repro import api
+    from repro.net.server import NetServer
+
+    if net is None:
+        net = api.NetConfig(port=0)
+    box = {}
+    started = threading.Event()
+
+    def run():
+        async def main():
+            box["loop"] = asyncio.get_running_loop()
+            box["stop"] = asyncio.Event()
+            async with NetServer(server, net, frontdoor) as ns:
+                box["ns"] = ns
+                started.set()
+                await box["stop"].wait()
+
+        asyncio.run(main())
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    assert started.wait(60), "NetServer failed to start"
+    try:
+        yield box["ns"]
+    finally:
+        box["loop"].call_soon_threadsafe(box["stop"].set)
+        t.join(30)
+
+
+def test_predict_over_the_wire_matches_submit(server):
+    rng = np.random.default_rng(5)
+    pts = rng.uniform(0, 1, (16, 2)).astype(np.float32)
+    with running(server) as ns, NetClient("127.0.0.1", ns.port) as c:
+        resp = c.predict(pts, deadline_s=30.0)
+        conn = c._conn
+        again = c.predict(pts, deadline_s=30.0)
+        assert c._conn is conn  # keepalive held across requests
+    mean, var = server.submit(pts)
+    # replicated path: float32-exact (XLA respecializes per batch shape)
+    np.testing.assert_allclose(resp.mean(), mean, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(resp.var(), var, atol=1e-5, rtol=1e-5)
+    # same wire frame twice -> same engine answer, bitwise
+    assert np.array_equal(resp.mean(), again.mean())
+    assert resp.server_version == 0
+    t = resp.timing()
+    assert t["total_ms"] >= t["engine_ms"] >= 0 and t["decode_ms"] >= 0
+
+
+def test_async_client_end_to_end(server):
+    pts = np.random.default_rng(6).uniform(0, 1, (8, 2)).astype(np.float32)
+
+    async def main(port):
+        async with AsyncNetClient("127.0.0.1", port) as c:
+            resp = await c.predict(pts)
+            status, health = await c.healthz()
+        return resp, status, health
+
+    with running(server) as ns:
+        resp, status, health = asyncio.run(main(ns.port))
+    mean, _ = server.submit(pts)
+    np.testing.assert_allclose(resp.mean(), mean, atol=1e-5, rtol=1e-5)
+    assert status == 200 and health["status"] == "ok"
+    assert health["protocol_version"] == protocol.PROTOCOL_VERSION
+
+
+def test_healthz_slo_and_transport_counters(server):
+    with running(server) as ns, NetClient("127.0.0.1", ns.port) as c:
+        status, health = c.healthz()
+        assert status == 200 and health["status"] == "ok"
+        c.predict(np.zeros((1, 2), np.float32))
+        slo = c.slo()
+    assert slo["requests"]["completed"] == 1
+    http_sec = slo["http"]
+    assert http_sec["requests"] >= 3  # healthz + predict + slo
+    assert http_sec["errors"] == dict.fromkeys(protocol.ERROR_CODES, 0)
+    assert http_sec["net_config"]["port"] == 0  # the config, not the bind
+
+
+def _raw_post(port, path, body, content_type="application/msgpack"):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=30)
+    try:
+        conn.request("POST", path, body=body,
+                     headers={"Content-Type": content_type})
+        resp = conn.getresponse()
+        return resp.status, resp.read()
+    finally:
+        conn.close()
+
+
+def test_garbage_body_is_400_bad_request(server):
+    with running(server) as ns:
+        status, body = _raw_post(ns.port, "/predict", b"\x00not msgpack")
+    assert status == 400
+    frame = protocol.decode_frame(body)
+    assert frame.code == "bad-request" and frame.retry_after_ms is None
+
+
+def test_wrong_frame_kind_is_400(server):
+    with running(server) as ns:
+        status, body = _raw_post(ns.port, "/predict", _err("internal"))
+    assert status == 400
+    assert protocol.decode_frame(body).code == "bad-request"
+
+
+def test_unknown_path_404_and_wrong_method_405(server):
+    with running(server) as ns:
+        conn = http.client.HTTPConnection("127.0.0.1", ns.port, timeout=30)
+        try:
+            conn.request("GET", "/nope")
+            r = conn.getresponse()
+            assert r.status == 404 and "error" in json.loads(r.read())
+            conn.request("GET", "/predict")
+            r = conn.getresponse()
+            assert r.status == 405 and "error" in json.loads(r.read())
+        finally:
+            conn.close()
+
+
+def test_oversized_request_rows_map_to_413(server):
+    from repro import api
+
+    fd_cfg = api.FrontDoorConfig(max_request_rows=8)
+    pts = np.zeros((9, 2), np.float32)
+    with running(server, frontdoor=fd_cfg) as ns, NetClient(
+        "127.0.0.1", ns.port, retry=FAST
+    ) as c:
+        with pytest.raises(ServerError) as exc:
+            c.predict(pts)
+        slo = c.slo()
+    assert exc.value.status == 413 and exc.value.frame.code == "oversized"
+    assert not isinstance(exc.value, RetriesExhausted)  # no retry: typed 4xx
+    assert slo["http"]["errors"]["oversized"] == 1
+
+
+def test_oversized_body_refused_before_read(server):
+    from repro import api
+
+    net = api.NetConfig(port=0, max_body_bytes=1024)
+    pts = np.zeros((200, 2), np.float32)  # 1600 raw bytes > 1024 cap
+    with running(server, net=net) as ns, NetClient(
+        "127.0.0.1", ns.port, retry=FAST
+    ) as c:
+        with pytest.raises(ServerError) as exc:
+            c.predict(pts)
+    assert exc.value.status == 413
+    assert "max_body_bytes" in exc.value.frame.message
+
+
+def test_shed_maps_to_429_with_retry_after(server):
+    from repro import api
+
+    with running(server) as ns:
+        async def reject(pts):
+            raise api.RequestRejected("admission queue full")
+
+        ns._fd.submit = reject
+        with NetClient(
+            "127.0.0.1", ns.port,
+            retry=RetryPolicy(max_attempts=2, base_backoff_ms=1.0, jitter=0.0),
+        ) as c:
+            with pytest.raises(RetriesExhausted) as exc:
+                c.predict(np.zeros((1, 2), np.float32))
+            slo = c.slo()
+    assert exc.value.status == 429 and exc.value.frame.code == "shed"
+    from repro.net.server import SHED_RETRY_MS
+
+    assert exc.value.frame.retry_after_ms == SHED_RETRY_MS
+    assert slo["http"]["errors"]["shed"] == 2  # both attempts were shed
+
+
+def test_broken_engine_maps_to_503_and_healthz_degrades(server):
+    with running(server) as ns:
+        ns._fd._broken = RuntimeError("engine died in a test")
+        with NetClient(
+            "127.0.0.1", ns.port,
+            retry=RetryPolicy(max_attempts=1, base_backoff_ms=1.0, jitter=0.0),
+        ) as c:
+            status, health = c.healthz()
+            assert status == 503 and health["status"] == "broken"
+            with pytest.raises(RetriesExhausted) as exc:
+                c.predict(np.zeros((1, 2), np.float32))
+    assert exc.value.status == 503
+    assert exc.value.frame.code == "engine-broken"
+    assert exc.value.frame.retry_after_ms is not None  # worth retrying later
+
+
+def test_swap_under_wire_load_zero_failures(server):
+    """``Server.swap`` mid-stream, observed THROUGH the transport: every
+    HTTP request succeeds, the served model version flips monotonically,
+    and both versions answered traffic (the endpoint never drops a
+    request to go live — docs/lifecycle.md, now over sockets)."""
+    from repro import api
+    from repro.data.spatial import e3sm_like_field
+
+    ds = e3sm_like_field(n=500, seed=1)
+    fitted_b = api.fit(api.FitConfig(grid=2, m=4, train_iters=30, seed=1), ds)
+    swap_server = api.Server(
+        api.fit(api.FitConfig(grid=2, m=4, train_iters=30, seed=0), ds)
+    )
+    pts = np.random.default_rng(7).uniform(0, 1, (4, 2)).astype(np.float32)
+    n_req = 24
+
+    async def drive(port):
+        loop = asyncio.get_running_loop()
+        state = {"done": 0}
+
+        async def stream(c):
+            # sequential on ONE persistent connection (the client is a
+            # single stream pair; ordering doubles as the route order the
+            # monotone-flip assertion needs)
+            versions = []
+            for i in range(n_req):
+                resp = await c.predict(pts, request_id=f"s{i}")
+                state["done"] += 1
+                versions.append(resp.server_version)
+            return versions
+
+        async def swapper():
+            while state["done"] < 5:
+                await asyncio.sleep(0.001)
+            await loop.run_in_executor(
+                None, lambda: swap_server.swap(fitted_b, version=1)
+            )
+
+        async with AsyncNetClient("127.0.0.1", port) as c:
+            _, versions = await asyncio.gather(swapper(), stream(c))
+        return versions
+
+    with running(swap_server) as ns:
+        versions = asyncio.run(drive(ns.port))
+    assert len(versions) == n_req  # zero failures: gather raised nothing
+    assert set(versions) == {0, 1}  # both models served traffic
+    assert versions == sorted(versions)  # the flip is monotone, no flapping
+    lc = swap_server.lifecycle()
+    assert lc["swaps"] == 1 and lc["active_version"] == 1
+
+
+# ---------------------------------------------------------------------------
+# session files: --http needs a net section
+# ---------------------------------------------------------------------------
+
+
+def test_http_flag_requires_net_section(tmp_path):
+    from repro.launch import serve_sharded as ss
+
+    path = tmp_path / "session.json"
+    path.write_text(json.dumps({"fit": {"grid": 2, "m": 4}}))
+    args = types.SimpleNamespace(config=str(path), http=True)
+    with pytest.raises(SystemExit, match="no 'net' section"):
+        ss.session_configs(args, expect_mode="replicated")
+    # same session without --http parses fine; with a net section, both do
+    args.http = False
+    _, _, net_cfg = ss.session_configs(args, expect_mode="replicated")
+    assert net_cfg is None
+    path.write_text(json.dumps({"fit": {"grid": 2, "m": 4},
+                                "net": {"port": 0}}))
+    args.http = True
+    _, _, net_cfg = ss.session_configs(args, expect_mode="replicated")
+    assert net_cfg.port == 0 and net_cfg.host == "127.0.0.1"
+
+
+# ---------------------------------------------------------------------------
+# sharded mesh path: the golden property holds BITWISE over the wire
+# (subprocess: virtual host devices before jax init — see test_api.py)
+# ---------------------------------------------------------------------------
+
+_SHARDED_HTTP_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=9"
+    import asyncio
+
+    import numpy as np
+
+    from repro import api
+    from repro.net.client import AsyncNetClient, RetryPolicy, ServerError
+    from repro.net.server import NetServer
+
+    ds_kwargs = dict(n=1000, seed=0)
+    from repro.data.spatial import e3sm_like_field
+    ds = e3sm_like_field(**ds_kwargs)
+    fitted = api.fit(api.FitConfig(grid=3, m=4, train_iters=120, seed=0), ds)
+    server = api.Server(fitted, api.ServeConfig(
+        mode="sharded", pipeline="pipelined", router="two-level",
+        backend="ref"))
+    lo, hi = ds.x.min(axis=0), ds.x.max(axis=0)
+    rng = np.random.default_rng(11)
+    reqs = [rng.uniform(lo, hi, (int(rng.integers(1, 65)), 2))
+                .astype(np.float32) for _ in range(10)]
+    jitter = rng.uniform(0, 0.01, len(reqs))
+
+    async def main():
+        async with NetServer(server, api.NetConfig(port=0)) as ns:
+            async def one(i):
+                # one connection per simulated client: concurrent arrivals
+                # coalesce in the front door's batching window
+                await asyncio.sleep(float(jitter[i]))
+                async with AsyncNetClient("127.0.0.1", ns.port) as c:
+                    return await c.predict(reqs[i], request_id=f"g{i}")
+            got = await asyncio.gather(*(one(i) for i in range(len(reqs))))
+            # typed 413 comes back over the wire too
+            async with AsyncNetClient("127.0.0.1", ns.port) as c:
+                try:
+                    await c.predict(np.zeros((65, 2), np.float32))
+                except ServerError as err:
+                    assert err.status == 413 and err.frame.code == "oversized"
+                else:
+                    raise SystemExit("oversized request was not refused")
+            return got
+
+    got = asyncio.run(main())
+    for i, (resp, q) in enumerate(zip(got, reqs)):
+        ms, vs = server.submit(q)
+        assert np.array_equal(resp.mean(), ms), i
+        assert np.array_equal(resp.var(), vs), i
+    print("golden: HTTP payload bitwise == solo Server.submit (sharded)")
+    print("SHARDED-HTTP-OK")
+    """
+)
+
+
+@pytest.mark.smoke
+def test_sharded_http_golden_bitwise():
+    env = dict(os.environ, PYTHONPATH="src")
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_HTTP_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=570,
+    )
+    assert r.returncode == 0, r.stderr[-4000:]
+    assert "SHARDED-HTTP-OK" in r.stdout
